@@ -1,0 +1,121 @@
+"""Assemble EXPERIMENTS.md: dry-run matrix summary, roofline tables
+(single-pod + multi-pod), and the SPerf log, from the artifacts in
+experiments/.
+
+Run: PYTHONPATH=src python -m benchmarks.assemble_experiments
+"""
+import glob
+import json
+import os
+
+from benchmarks.roofline import build_table, markdown
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def dryrun_matrix() -> str:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    lines = [
+        "| arch | shape | mesh | status | compile s | temp GB/dev |"
+        " args GB/dev | HLO collectives (module) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        st = r["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+        if st == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped |"
+                " - | - | - | - |"
+            )
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("coll_module", {}).get("ops_by_kind", {})
+        coll_s = ",".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in sorted(coll.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {st} "
+            f"| {r.get('compile_s', '-')} "
+            f"| {mem.get('temp_bytes', 0) / 1e9:.1f} "
+            f"| {mem.get('argument_bytes', 0) / 1e9:.2f} "
+            f"| {coll_s} |"
+        )
+    header = (
+        f"**{n_ok} compiled ok, {n_skip} documented skips, {n_err} errors** "
+        "(every non-skipped (arch x shape x mesh) cell lowered + compiled "
+        "with SPMD partitioning for 256/512 devices).\n\n"
+    )
+    return header + "\n".join(lines)
+
+
+def main():
+    md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(md_path) as f:
+        base = f.read()
+    for marker in (
+        "*(sections below are appended by the analysis runs)*",
+        "\n## §Dry-run-matrix (generated)",
+    ):
+        cut = base.find(marker)
+        if cut != -1:
+            base = base[:cut]
+            break
+
+    parts = [base]
+    parts.append("\n## §Dry-run-matrix (generated)\n\n" + dryrun_matrix())
+    parts.append(
+        "\n\n## §Roofline-table — single pod 16x16, faithful baseline "
+        "rules (generated)\n\n"
+        "`roofline frac` = compute term / max(all terms) — the fraction of "
+        "the step spent at the compute roofline under a no-overlap bound. "
+        "`6ND/analytic` = MODEL_FLOPS / analytic total (remat + attention + "
+        "capacity overheads explain the gap; for isomap rows the analytic "
+        "total charges min-plus at the VPU rate, hence the 0.02).\n\n"
+        + markdown(build_table("pod"))
+    )
+    parts.append(
+        "\n\n## §Roofline-table — multi-pod 2x16x16 (generated)\n\n"
+        + markdown(build_table("multipod"))
+    )
+    perf_path = os.path.join(ROOT, "experiments", "perf", "PERF_LOG.md")
+    if os.path.exists(perf_path):
+        with open(perf_path) as f:
+            perf = f.read()
+        parts.append(
+            "\n\n## §Perf-iterations (generated from "
+            "benchmarks/perf_iterations.py)\n\n" + perf
+        )
+    parts.append(
+        "\n## §Perf summary — paper-faithful baseline vs beyond-paper "
+        "optimized\n\n"
+        "| cell | baseline step | optimized step | gain | change | exactness |\n"
+        "|---|---|---|---|---|---|\n"
+        "| smollm-135m train_4k | 0.183 s (collective-bound) | 0.034 s "
+        "(compute-bound, frac 1.00) | 5.3x | PROFILE_DP: model axis TP->DP |"
+        " identical math |\n"
+        "| jamba-52B decode_32k | 257 ms/token (FSDP gathers) | 8.2 ms "
+        "(HBM-bound) | 31x | PROFILE_SERVE: resident bf16 weights | bf16 "
+        "weights (serving standard) |\n"
+        "| isomap APSP n=2^19 | 365 s (VPU-bound) | 298 s exact / 149 s "
+        "bf16 opt-in | 1.23x / 2.45x | split panels (+ optional bf16 "
+        "min-plus) | exact; bf16 mode measured procrustes-neutral at n=1k |\n"
+        "| isomap kNN n=2^19 (bonus) | 688 ms (collective-bound) | 168 ms "
+        "(HBM-bound) | 4.1x | gather features once + split ring over the "
+        "model axis | exact (test-covered) |\n"
+        "\nThe paper-faithful baseline (every cell, both meshes) is the "
+        "table above; the optimized variants are separate profiles/flags "
+        "so both remain runnable.\n"
+    )
+    with open(md_path, "w") as f:
+        f.write("".join(parts))
+    print(f"EXPERIMENTS.md assembled ({len(''.join(parts))} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline table generator: merges the dry-run artifacts
+(experiments/dryrun/*.json: memory analysis, HLO collective inventory)
+with the analytic per-cell terms (launch/analytics.py) and emits the
+EXPERIMENTS.md SRoofline markdown table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs
+from repro.launch.analytics import analyze, analyze_isomap, HBM_BW, PEAK_FLOPS
+from repro.models.config import SHAPES
+
+ISOMAP_STAGES = ("knn", "apsp", "center", "power")
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_dryrun(mesh_tag: str) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh_tag}.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def build_table(mesh_tag: str = "pod"):
+    multi = mesh_tag == "multipod"
+    dry = load_dryrun(mesh_tag)
+    rows = []
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        for shape in SHAPES.values():
+            rec = dry.get((arch, shape.name), {})
+            if shape.name == "long_500k" and not cfg.long_context_ok:
+                rows.append({
+                    "arch": arch, "shape": shape.name, "status": "skipped",
+                })
+                continue
+            r = analyze(cfg, shape, multi_pod=multi)
+            hbm_gb = rec.get("memory", {}).get("temp_bytes", 0) / 1e9
+            rows.append({
+                "arch": arch,
+                "shape": shape.name,
+                "status": rec.get("status", "pending"),
+                "compute_s": r.compute_s,
+                "memory_s": r.memory_s,
+                "collective_s": r.collective_s,
+                "dominant": r.dominant(),
+                "model_flops": r.model_flops_global,
+                "hlo_flops_dev": rec.get("flops_module", 0.0),
+                "flops_dev": r.flops,
+                "chips": 512 if multi else 256,
+                "roofline_frac": r.roofline_fraction(),
+                "mem_temp_gb": hbm_gb,
+                "step_s": r.step_time_s(),
+            })
+    # the paper's own pipeline cells
+    for stage in ISOMAP_STAGES:
+        rec = dry.get(("isomap", f"isomap_{stage}"), {})
+        r = analyze_isomap(stage, multi_pod=multi)
+        rows.append({
+            "arch": "isomap(n=2^19)",
+            "shape": stage,
+            "status": rec.get("status", "pending"),
+            "compute_s": r.compute_s,
+            "memory_s": r.memory_s,
+            "collective_s": r.collective_s,
+            "dominant": r.dominant(),
+            "model_flops": r.model_flops_global,
+            "hlo_flops_dev": rec.get("flops_module", 0.0),
+            "flops_dev": r.flops,
+            "chips": 512 if multi else 256,
+            "roofline_frac": r.roofline_fraction(),
+            "mem_temp_gb": rec.get("memory", {}).get("temp_bytes", 0) / 1e9,
+            "step_s": r.step_time_s(),
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    lines = [
+        "| arch | shape | status | compute s | memory s | collective s |"
+        " dominant | roofline frac | 6ND/analytic | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | skipped (full attention"
+                " @500k) | - | - | - | - | - | - | - |"
+            )
+            continue
+        useful = r["model_flops"] / (r["flops_dev"] * r["chips"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_frac']:.2f} | {useful:.2f} "
+            f"| {r['mem_temp_gb']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    rows = build_table(args.mesh)
+    print(markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

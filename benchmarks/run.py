@@ -1,0 +1,153 @@
+"""Benchmark harness - one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  * scaling_*      - paper Tables I-III analogue: per-stage wall time of the
+                     end-to-end Isomap pipeline vs problem size n (CPU
+                     measurements; the device-count dimension of the paper's
+                     tables is covered by the dry-run roofline model).
+  * blocksize_*    - paper Fig. 6 analogue: end-to-end time vs block size b.
+  * kernel_*       - min-plus / FW / pairwise kernel microbenchmarks
+                     (interpret-mode Pallas is not representative on CPU, so
+                     kernels are benchmarked through their jnp reference
+                     path, which is what executes off-TPU).
+  * stage_*        - per-stage breakdown at a fixed n (kNN/APSP/center/eig).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, repeats=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _row(name, seconds, derived=""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def bench_scaling():
+    """Tables I-III analogue: total + per-stage time vs n."""
+    from repro.core import apsp, centering, graph, knn, spectral
+    from repro.data import euler_isometric_swiss_roll
+
+    for n in (256, 512, 1024):
+        x, _ = euler_isometric_swiss_roll(n, seed=0)
+        x = jnp.asarray(x)
+        b = min(256, n)
+        t_knn = _timeit(
+            lambda: knn.knn_blocked(x, k=10, block=b), repeats=2
+        )
+        d, i = knn.knn_blocked(x, k=10, block=b)
+        g = graph.knn_to_graph(d, i, n=n)
+        t_apsp = _timeit(lambda: apsp.apsp_blocked(g, block=b), repeats=2)
+        a = apsp.apsp_blocked(g, block=b)
+        t_cen = _timeit(lambda: centering.double_center(jnp.square(a)))
+        bmat = centering.double_center(jnp.square(a))
+        t_eig = _timeit(
+            lambda: spectral.power_iteration(bmat, d=2, max_iter=50, tol=1e-9),
+            repeats=2,
+        )
+        total = t_knn + t_apsp + t_cen + t_eig
+        _row(f"scaling_total_n{n}", total, f"n={n}")
+        _row(f"scaling_knn_n{n}", t_knn, f"{t_knn / total:.0%}_of_total")
+        _row(f"scaling_apsp_n{n}", t_apsp, f"{t_apsp / total:.0%}_of_total")
+        _row(f"scaling_center_n{n}", t_cen, "")
+        _row(f"scaling_eig_n{n}", t_eig, "")
+
+
+def bench_blocksize():
+    """Fig. 6 analogue: APSP time vs logical block size b at fixed n."""
+    from repro.core import apsp, graph, knn
+    from repro.data import euler_isometric_swiss_roll
+
+    n = 1024
+    x, _ = euler_isometric_swiss_roll(n, seed=0)
+    x = jnp.asarray(x)
+    d, i = knn.knn_blocked(x, k=10, block=256)
+    g = graph.knn_to_graph(d, i, n=n)
+    for b in (64, 128, 256, 512, 1024):
+        t = _timeit(lambda: apsp.apsp_blocked(g, block=b), repeats=2)
+        _row(f"blocksize_apsp_b{b}", t, f"q={n // b}")
+
+
+def bench_kernels():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0, 10, (512, 512)), jnp.float32)
+    t = _timeit(lambda: ops.minplus(a, a, mode="ref"))
+    _row("kernel_minplus_512", t, f"{2 * 512**3 / t / 1e9:.1f}_Gop_s")
+    t = _timeit(lambda: ops.floyd_warshall(a, mode="ref"))
+    _row("kernel_fw_512", t, f"{2 * 512**3 / t / 1e9:.1f}_Gop_s")
+    x = jnp.asarray(rng.normal(size=(1024, 784)), jnp.float32)
+    t = _timeit(lambda: ops.pairwise_sq_dists(x, x, mode="ref"))
+    _row("kernel_pairwise_1024x784", t, f"{2 * 1024 * 1024 * 784 / t / 1e9:.1f}_GFLOP_s")
+
+
+def bench_spectral():
+    """Alg. 2 convergence: iterations + time vs d."""
+    from repro.core import centering, spectral
+    from repro.data import euler_isometric_swiss_roll
+    from repro.core import apsp, graph, knn
+
+    n = 512
+    x, _ = euler_isometric_swiss_roll(n, seed=0)
+    x = jnp.asarray(x)
+    d_, i_ = knn.knn_blocked(x, k=10, block=256)
+    g = graph.knn_to_graph(d_, i_, n=n)
+    a = apsp.apsp_blocked(g, block=256)
+    bmat = centering.double_center(jnp.square(a))
+    for d in (2, 3, 8):
+        eig = spectral.power_iteration(bmat, d=d, max_iter=100, tol=1e-9)
+        t = _timeit(
+            lambda d=d: spectral.power_iteration(
+                bmat, d=d, max_iter=100, tol=1e-9
+            ),
+            repeats=2,
+        )
+        _row(f"spectral_d{d}", t, f"iters={int(eig.iterations)}")
+
+
+def bench_lm_smoke():
+    """One smoke train-step timing per architecture family."""
+    from repro.configs import get_smoke_config
+    from repro.models.model import build_model
+    from repro.sharding import materialize
+
+    for arch in ("llama3-8b", "granite-moe-1b-a400m", "jamba-v0.1-52b",
+                 "xlstm-350m"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = materialize(model.param_specs(), jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((2, 33), jnp.int32)}
+        if cfg.kind == "encdec":
+            batch["frames"] = jnp.ones((2, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        fn = jax.jit(lambda p, b: model.loss(p, b)[0])
+        t = _timeit(fn, params, batch, repeats=2)
+        _row(f"lm_smoke_loss_{arch}", t, "")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_kernels()
+    bench_scaling()
+    bench_blocksize()
+    bench_spectral()
+    bench_lm_smoke()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Architecture config registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+
+ARCHS = (
+    "minitron-4b",
+    "llama3-8b",
+    "smollm-135m",
+    "gemma-2b",
+    "granite-moe-1b-a400m",
+    "qwen2-moe-a2.7b",
+    "whisper-medium",
+    "jamba-v0.1-52b",
+    "xlstm-350m",
+    "qwen2-vl-2b",
+)
+
+
+def _module_for(arch: str) -> str:
+    return "repro.configs." + arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return importlib.import_module(_module_for(arch)).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return importlib.import_module(_module_for(arch)).SMOKE

@@ -1,0 +1,29 @@
+"""Gemma-2B [arXiv:2403.08295]: GeGLU, head_dim=256, MQA (kv=1), tied,
+embeddings scaled by sqrt(d_model)."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    kv_heads=1,
+    d_ff=16384,
+    vocab=256_000,
+    head_dim=256,
+    mlp_kind="geglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    embed_scale=True,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="arXiv:2403.08295; hf:google/gemma-2b",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=1, head_dim=32,
+    d_ff=256, vocab=512, remat=False,
+)

@@ -1,0 +1,30 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base]:
+32 experts, top-8, per-expert d_ff=512."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    kv_heads=8,
+    d_ff=512,
+    vocab=49_155,
+    mlp_kind="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    pattern=(LayerPattern("attn", "moe"),),
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff=512),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=64, vocab=512, remat=False,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=64),
+)

@@ -1,0 +1,45 @@
+"""Jamba-v0.1 (52B) [arXiv:2403.19887]: hybrid Mamba+attention at 1:7 with
+MoE (16 experts, top-2) on every other layer.  Period-8 pattern: attention
+at slot 4, Mamba elsewhere; MoE on odd slots.  No positional embeddings
+(the Mamba layers carry position).  Sub-quadratic -> long_500k eligible.
+"""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import MambaConfig
+
+_PATTERN = tuple(
+    LayerPattern(
+        mixer="attn" if i == 4 else "mamba",
+        ffn="moe" if i % 2 == 1 else "mlp",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=14336,
+    vocab=65_536,
+    mlp_kind="swiglu",
+    rope_theta=None,
+    pattern=_PATTERN,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=14336),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    scan_chunk=64,   # keeps the per-chunk (B,c,d_inner,N) f32 buffers ~0.5GB
+    long_context_ok=True,
+    source="arXiv:2403.19887; hf:ai21labs/Jamba-v0.1",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=8, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, remat=False, scan_chunk=16,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff=128),
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+)

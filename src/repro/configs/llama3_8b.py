@@ -1,0 +1,25 @@
+"""Llama-3-8B [arXiv:2407.21783]: GQA kv=8, 128k vocab, theta=500k."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=14336,
+    vocab=128_256,
+    mlp_kind="swiglu",
+    rope_theta=500_000.0,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="arXiv:2407.21783",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, remat=False,
+)

@@ -1,0 +1,29 @@
+"""Minitron-4B: width/depth-pruned Nemotron [arXiv:2407.14679; hf].
+
+Squared-ReLU MLP (Nemotron family), GQA with 8 KV heads, 256k vocabulary.
+"""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    kv_heads=8,
+    d_ff=9216,
+    vocab=256_000,
+    head_dim=128,
+    mlp_kind="relu2",
+    rope_theta=10_000.0,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="arXiv:2407.14679; hf:nvidia/Minitron-4B-Base",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, remat=False,
+)

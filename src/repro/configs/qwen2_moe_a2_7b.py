@@ -1,0 +1,30 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B]: 60 routed experts top-4
+plus 4 shared experts; QKV biases."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=1408,
+    vocab=151_936,
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    attn_bias=True,
+    pattern=(LayerPattern("attn", "moe"),),
+    moe=MoEConfig(n_experts=60, top_k=4, d_ff=1408, n_shared=4),
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
+    d_ff=64, vocab=512, remat=False,
+    moe=MoEConfig(n_experts=6, top_k=2, d_ff=64, n_shared=1),
+)

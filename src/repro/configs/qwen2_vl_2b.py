@@ -1,0 +1,33 @@
+"""Qwen2-VL-2B [arXiv:2409.12191]: M-RoPE (16/24/24 sections), GQA kv=2,
+QKV biases, tied embeddings.  Vision tower STUBBED: input_specs supplies
+256 precomputed patch embeddings prepended to the text sequence."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    kv_heads=2,
+    d_ff=8960,
+    vocab=151_936,
+    head_dim=128,
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    attn_bias=True,
+    tie_embeddings=True,
+    vision_tokens=256,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="arXiv:2409.12191; hf:Qwen/Qwen2-VL-2B",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=32,
+    mrope_sections=(6, 5, 5),
+    d_ff=128, vocab=512, vision_tokens=16, remat=False,
+)

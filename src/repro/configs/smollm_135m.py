@@ -1,0 +1,26 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M]: llama-arch small, tied."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    kv_heads=3,
+    d_ff=1536,
+    vocab=49_152,
+    mlp_kind="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=48, n_heads=3, kv_heads=3, head_dim=16,
+    d_ff=96, vocab=512, remat=False,
+)

@@ -1,0 +1,33 @@
+"""Whisper-medium [arXiv:2212.04356]: 24+24 encoder-decoder, GELU,
+layernorm, attention biases.  Conv frontend STUBBED (precomputed frame
+embeddings); decoder positional table sized to the assigned shapes."""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    kind="encdec",
+    family="audio",
+    n_layers=24,
+    enc_layers=24,
+    enc_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=4096,
+    vocab=51_865,
+    mlp_kind="gelu",
+    norm="layer",
+    rope_theta=None,
+    attn_bias=True,
+    tie_embeddings=True,
+    pattern=(LayerPattern("attn", "mlp"),),
+    source="arXiv:2212.04356; hf:openai/whisper-medium",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, enc_layers=2, enc_seq=32, d_model=64, n_heads=4,
+    kv_heads=4, head_dim=16, d_ff=128, vocab=512, remat=False,
+)

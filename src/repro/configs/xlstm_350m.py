@@ -1,0 +1,33 @@
+"""xLSTM-350M [arXiv:2405.04517]: alternating mLSTM / sLSTM blocks.
+
+The assigned config lists d_ff=0: mLSTM blocks carry their own gating
+projections (no FFN); sLSTM blocks are followed by a 4/3-factor gated MLP
+per the paper (1376 = round(4/3 * 1024) to a lane multiple).  Recurrent
+state is O(d) -> long_500k eligible.
+"""
+import dataclasses
+
+from repro.models.config import LayerPattern, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    kv_heads=4,
+    d_ff=1376,
+    vocab=50_304,
+    mlp_kind="swiglu",
+    norm="layer",
+    rope_theta=None,
+    pattern=(LayerPattern("mlstm", "none"), LayerPattern("slstm", "mlp")),
+    long_context_ok=True,
+    source="arXiv:2405.04517",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2, d_model=64, n_heads=2, kv_heads=2,
+    d_ff=96, vocab=512, remat=False, scan_chunk=16,
+)

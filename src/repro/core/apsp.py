@@ -1,0 +1,212 @@
+"""Blocked communication-avoiding all-pairs shortest paths (paper SIII-B).
+
+The algorithm is the Solomonik et al. / Venkataraman blocked Floyd-Warshall
+the paper casts into Spark.  Per diagonal index I (q = n/b iterations):
+
+  Phase 1   D = FW(G[I,I])                       (in-VMEM kernel)
+  Phase 2   R = D (x) G[I,:]   (row panel)       (min-plus)
+            C = G[:,I] (x) D   (column panel)
+  Phase 3   G = min(G, C (x) R)                  (rank-b min-plus update)
+
+Because D has a zero diagonal, the Phase-3 update subsumes writing back D,
+R and C (min-plus idempotency) - a fusion the Spark version cannot express
+(it must yield per-block RDD updates) but single-program SPMD can.
+
+Two realizations:
+
+* :func:`apsp_blocked` - single device; oracle + laptop scale.
+* :func:`apsp_sharded` - shard_map over a ("data", "model") mesh with a 2-D
+  tile decomposition.  Panels are broadcast with masked psums: the block
+  row crosses the "data" axis (O(b * n / p_model) per device), the block
+  column crosses "model".  Per iteration the communicated volume is
+  O(n*b) against O(n^2 b) compute - the communication-avoiding ratio the
+  paper inherits from the HPC schedule.
+
+Fault tolerance: :func:`apsp_sharded` exposes segment execution (run
+iterations [lo, hi) on explicit state) so the driver can checkpoint the
+sharded matrix every K panels - the TPU analogue of the paper's
+every-10-iterations RDD lineage checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops
+from repro.sharding.logical import folded_axis_index, mesh_axis_size
+
+
+# ----------------------------------------------------------------- local --
+
+
+@functools.partial(jax.jit, static_argnames=("block", "mode"))
+def apsp_blocked(g: jax.Array, *, block: int = 512, mode: str = "auto"):
+    """Single-device blocked Floyd-Warshall. g: (n, n), inf = no edge."""
+    n = g.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    q = n // block
+
+    def iteration(i, g):
+        off = i * block
+        d = jax.lax.dynamic_slice(g, (off, off), (block, block))
+        d = ops.floyd_warshall(d, mode=mode)
+        r = jax.lax.dynamic_slice(g, (off, 0), (block, n))
+        c = jax.lax.dynamic_slice(g, (0, off), (n, block))
+        r = ops.minplus(d, r, mode=mode)
+        c = ops.minplus(c, d, mode=mode)
+        return jnp.minimum(g, ops.minplus(c, r, mode=mode))
+
+    return jax.lax.fori_loop(0, q, iteration, g)
+
+
+# ------------------------------------------------------------- sharded ----
+
+
+def _masked_bcast_rows(local, off_in_shard, own, b, axis):
+    """Extract b rows starting at off_in_shard from the owning shard and
+    broadcast them along `axis` via a masked psum."""
+    sl = jax.lax.dynamic_slice_in_dim(local, off_in_shard, b, axis=0)
+    sl = jnp.where(own, sl, 0.0)
+    return jax.lax.psum(sl, axis)
+
+
+def _masked_bcast_cols(local, off_in_shard, own, b, axis):
+    sl = jax.lax.dynamic_slice_in_dim(local, off_in_shard, b, axis=1)
+    sl = jnp.where(own, sl, 0.0)
+    return jax.lax.psum(sl, axis)
+
+
+def _apsp_shard_body(
+    g_loc, lo, hi, *, b, nr, nc, pd, pm, data_axis, model_axis, mode,
+    split_panels=False,
+):
+    """Run diagonal iterations [lo, hi) on the local (nr, nc) tile.
+
+    split_panels: Phase-2 panel products are redundantly computed by every
+    rank of a row/column group in the baseline (the faithful port of the
+    paper's one-block-one-task mapping).  When set, each rank computes a
+    1/p slice of the panel and the group all-gathers the result - panel
+    FLOPs drop p-fold for one extra (b x n/p) gather per iteration (see
+    EXPERIMENTS.md SPerf, apsp iteration 1).
+    """
+    di = folded_axis_index(data_axis)
+    mi = folded_axis_index(model_axis)
+
+    def iteration(i, g_loc):
+        off = i * b
+        # --- panel broadcasts (the only communication) ---
+        r_owner = off // nr          # data-group owning the block row
+        c_owner = off // nc          # model-group owning the block column
+        row = _masked_bcast_rows(
+            g_loc, off - r_owner * nr, di == r_owner, b, data_axis
+        )                            # (b, nc) on every device
+        col = _masked_bcast_cols(
+            g_loc, off - c_owner * nc, mi == c_owner, b, model_axis
+        )                            # (nr, b)
+        # diagonal block, replicated everywhere: slice it out of `row`
+        loc_off = jnp.clip(off - c_owner * nc, 0, nc - b)
+        sl = jax.lax.dynamic_slice_in_dim(row, loc_off, b, axis=1)
+        diag = jax.lax.psum(jnp.where(mi == c_owner, sl, 0.0), model_axis)
+        # --- Phase 1: FW on the diagonal block (replicated compute) ---
+        diag = ops.floyd_warshall(diag, mode=mode)
+        # --- Phase 2: panel updates ---
+        if split_panels and b % pd == 0 and b % pm == 0:
+            bs_r = b // pd
+            dslice = jax.lax.dynamic_slice_in_dim(diag, di * bs_r, bs_r, 0)
+            row_part = ops.minplus(dslice, row, mode=mode)  # (b/pd, nc)
+            row = jax.lax.all_gather(
+                row_part, data_axis, axis=0, tiled=True
+            )                                               # (b, nc)
+            bs_c = b // pm
+            dslice = jax.lax.dynamic_slice_in_dim(diag, mi * bs_c, bs_c, 1)
+            col_part = ops.minplus(col, dslice, mode=mode)  # (nr, b/pm)
+            col = jax.lax.all_gather(
+                col_part, model_axis, axis=1, tiled=True
+            )                                               # (nr, b)
+        else:
+            row = ops.minplus(diag, row, mode=mode)   # (b,b) x (b,nc)
+            col = ops.minplus(col, diag, mode=mode)   # (nr,b) x (b,b)
+        # --- Phase 3: rank-b min-plus update of the local tile ---
+        return jnp.minimum(g_loc, ops.minplus(col, row, mode=mode))
+
+    return jax.lax.fori_loop(lo, hi, iteration, g_loc)
+
+
+def make_apsp_segment(
+    mesh: Mesh,
+    *,
+    n: int,
+    b: int,
+    data_axis: str = "data",
+    model_axis: str = "model",
+    mode: str = "auto",
+    split_panels: bool = False,
+):
+    """Build segment_fn(g, lo, hi) -> g running APSP iterations [lo, hi).
+
+    g is the (n, n) matrix sharded P(data_axis, model_axis).  Segments let
+    the caller checkpoint between them (fault-tolerance unit).
+    """
+    pd, pm = mesh_axis_size(mesh, data_axis), mesh_axis_size(mesh, model_axis)
+    nr, nc = n // pd, n // pm
+    assert n % pd == 0 and n % pm == 0
+    assert nr % b == 0 or b % nr == 0
+    assert b <= nr and b <= nc, (
+        f"block {b} must fit in a local tile ({nr}, {nc})"
+    )
+    assert nr % b == 0 and nc % b == 0
+
+    body = functools.partial(
+        _apsp_shard_body,
+        b=b, nr=nr, nc=nc, pd=pd, pm=pm,
+        data_axis=data_axis, model_axis=model_axis, mode=mode,
+        split_panels=split_panels,
+    )
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(data_axis, model_axis), P(), P()),
+        out_specs=P(data_axis, model_axis),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def apsp_sharded(
+    g: jax.Array,
+    mesh: Mesh,
+    *,
+    b: int | None = None,
+    segment: int | None = None,
+    checkpoint_cb=None,
+    mode: str = "auto",
+    data_axis: str = "data",
+    model_axis: str = "model",
+    split_panels: bool = False,
+):
+    """Distributed APSP over the production mesh.
+
+    checkpoint_cb(g, next_iter) is invoked between segments if given.
+    """
+    n = g.shape[0]
+    pd = mesh_axis_size(mesh, data_axis)
+    b = b or n // pd
+    q = n // b
+    segment = segment or q
+    seg_fn = make_apsp_segment(
+        mesh, n=n, b=b, data_axis=data_axis, model_axis=model_axis, mode=mode,
+        split_panels=split_panels,
+    )
+    lo = 0
+    while lo < q:
+        hi = min(lo + segment, q)
+        g = seg_fn(g, jnp.int32(lo), jnp.int32(hi))
+        if checkpoint_cb is not None:
+            checkpoint_cb(g, hi)
+        lo = hi
+    return g

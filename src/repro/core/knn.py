@@ -1,0 +1,192 @@
+"""k-nearest-neighbours search (paper SIII-A), TPU-native.
+
+Two paths with identical semantics:
+
+* :func:`knn_blocked` - single-device blocked brute force.  The (n, n)
+  distance matrix is produced tile-by-tile (Pallas pairwise kernel on TPU)
+  and a running top-k per row is folded across column tiles, so the full
+  matrix is never materialized - the analogue of the paper's
+  block-pair/flatMap + heap-merge scheme.
+
+* :func:`knn_ring` - shard_map ring algorithm for a 1-D row decomposition.
+  Each of the p shards holds an (n/p, D) slab; at step t the slab received
+  from the ring neighbour is used to compute one (n/p, n/p) distance block
+  while `lax.ppermute` forwards it on.  After p steps every block pair has
+  been computed exactly once - this replaces the paper's upper-triangular
+  block enumeration (no (J,I) duplicates, no filter pass) and overlaps
+  communication with compute.
+
+Distances returned are *squared* Euclidean; the neighbourhood graph stage
+takes the sqrt (the paper builds G from Euclidean distances and squares
+again after APSP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import ops
+
+_BIG = jnp.float32(jnp.inf)
+
+
+def _fold_topk(best_d, best_i, new_d, new_i, k: int):
+    """Merge running (b, k) top-k with a new (b, c) candidate block."""
+    d = jnp.concatenate([best_d, new_d], axis=1)
+    i = jnp.concatenate([best_i, new_i], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "mode"))
+def knn_blocked(
+    x: jax.Array, *, k: int, block: int = 1024, mode: str = "auto"
+):
+    """Exact kNN of every row of x (n, D) against all others.
+
+    Returns (dists, idx), each (n, k), sorted ascending; squared distances.
+    Self-matches are excluded.
+    """
+    n, _ = x.shape
+    block = min(block, n)
+    n_orig = n
+    if n % block:
+        pad = block - n % block
+        # sentinel rows: far away, masked out of every top-k below
+        x = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1e6)
+        n += pad
+    q = n // block
+
+    def row_block(i):
+        xi = jax.lax.dynamic_slice_in_dim(x, i * block, block, 0)
+
+        def col_step(j, carry):
+            best_d, best_i = carry
+            xj = jax.lax.dynamic_slice_in_dim(x, j * block, block, 0)
+            d = ops.pairwise_sq_dists(xi, xj, mode=mode)
+            # mask self distances and padded sentinel columns
+            rows = i * block + jnp.arange(block)[:, None]
+            cols = j * block + jnp.arange(block)[None, :]
+            d = jnp.where((rows == cols) | (cols >= n_orig), _BIG, d)
+            nd, ni = jax.lax.top_k(-d, k)
+            return _fold_topk(best_d, best_i, -nd, cols[0][ni], k)
+
+        init = (
+            jnp.full((block, k), _BIG),
+            jnp.zeros((block, k), jnp.int32),
+        )
+        return jax.lax.fori_loop(0, q, col_step, init)
+
+    ds, is_ = jax.lax.map(row_block, jnp.arange(q))
+    return ds.reshape(n, k)[:n_orig], is_.reshape(n, k)[:n_orig]
+
+
+def knn_ring(
+    x: jax.Array,
+    *,
+    k: int,
+    mesh: Mesh,
+    row_axis: str = "data",
+    feat_axis: str | None = "model",
+    split_axis: str | None = None,
+    gather_features: bool = True,
+    mode: str = "auto",
+):
+    """Distributed exact kNN over a 2-D (rows x features) sharding of x.
+
+    Rows ride a `ppermute` ring over `row_axis` (each block pair computed
+    exactly once - the TPU form of the paper's upper-triangular block
+    enumeration).  The feature dimension is sharded over `feat_axis`; with
+    ``gather_features`` (default, see EXPERIMENTS.md SPerf cell D) each
+    device all-gathers its slab's features once up front (O(local x D)
+    moved) and distance blocks stay local; otherwise the additive
+    decomposition of ||x-y||^2 is psum-reduced per ring step (O(local^2)
+    per step - the faithful-but-naive baseline).  `split_axis` (e.g. the
+    "pod" axis) splits the ring walk: each replica group starts at a
+    rotated offset and walks p/|split| of the ring, with a final
+    cross-group top-k merge - this is how the multi-pod mesh parallelizes
+    the kNN stage across pods.  Returns (dists, idx), row-sharded like x.
+    """
+    p = mesh.shape[row_axis]
+    n = x.shape[0]
+    assert n % p == 0, (n, p)
+    local = n // p
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    n_split = mesh.shape[split_axis] if split_axis else 1
+    assert p % n_split == 0
+    steps = p // n_split
+
+    def shard_fn(xs):
+        # xs: (local, D_local) slab of this shard
+        me = jax.lax.axis_index(row_axis)
+        rows = me * local + jnp.arange(local)[:, None]
+        if gather_features and feat_axis is not None:
+            # one up-front feature gather; every distance block after
+            # this is communication-free (vs a psum of the full
+            # (local, local) block per ring step)
+            xs = jax.lax.all_gather(xs, feat_axis, axis=1, tiled=True)
+        buf, owner = xs, me
+        if split_axis:
+            # rotate each split group's starting slab by group*steps: one
+            # extra permute hop per group level (log-style pre-rotation)
+            g = jax.lax.axis_index(split_axis)
+            for level in range(1, n_split):
+                hop = [(i, (i + steps) % p) for i in range(p)]
+                buf_r = jax.lax.ppermute(buf, row_axis, hop)
+                owner_r = jax.lax.ppermute(owner, row_axis, hop)
+                take = g >= level
+                buf = jnp.where(take, buf_r, buf)
+                owner = jnp.where(take, owner_r, owner)
+
+        def step(t, carry):
+            best_d, best_i, buf, owner = carry
+            cols = owner * local + jnp.arange(local)[None, :]
+            d = ops.pairwise_sq_dists(xs, buf, mode=mode)
+            if feat_axis is not None and not gather_features:
+                d = jax.lax.psum(d, feat_axis)
+            d = jnp.where(rows == cols, _BIG, d)
+            nd, ni = jax.lax.top_k(-d, k)
+            best_d, best_i = _fold_topk(
+                best_d,
+                best_i,
+                -nd,
+                jnp.take_along_axis(
+                    jnp.broadcast_to(cols, (local, local)), ni, axis=1
+                ),
+                k,
+            )
+            # rotate the slab around the ring; the permute overlaps with the
+            # next step's distance computation
+            buf = jax.lax.ppermute(buf, row_axis, perm)
+            owner = jax.lax.ppermute(owner, row_axis, perm)
+            return best_d, best_i, buf, owner
+
+        init = (
+            jnp.full((local, k), _BIG),
+            jnp.zeros((local, k), jnp.int32),
+            buf,
+            owner,
+        )
+        best_d, best_i, _, _ = jax.lax.fori_loop(0, steps, step, init)
+        if split_axis:
+            # merge the split groups' candidate lists
+            all_d = jax.lax.all_gather(best_d, split_axis, axis=1, tiled=True)
+            all_i = jax.lax.all_gather(best_i, split_axis, axis=1, tiled=True)
+            neg, pos = jax.lax.top_k(-all_d, k)
+            best_d = -neg
+            best_i = jnp.take_along_axis(all_i, pos, axis=1)
+        return best_d, best_i
+
+    in_spec = P(row_axis, feat_axis) if feat_axis else P(row_axis, None)
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=in_spec,
+        out_specs=(P(row_axis, None), P(row_axis, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)(x)

@@ -1,0 +1,42 @@
+"""Quality metrics for manifold learning (paper SIV-A).
+
+Procrustes error: dissimilarity after the optimal similarity transform
+(translation + rotation/reflection + isotropic scale) of X onto Y - the
+measure the paper reports (2.6741e-5 on Swiss50).  Matches
+scipy.spatial.procrustes semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def procrustes_error(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Procrustes disparity between point sets x, y of shape (n, d)."""
+    x = x - jnp.mean(x, axis=0)
+    y = y - jnp.mean(y, axis=0)
+    nx = jnp.linalg.norm(x)
+    ny = jnp.linalg.norm(y)
+    x = x / nx
+    y = y / ny
+    u, s, vt = jnp.linalg.svd(x.T @ y)
+    # optimal rotation of x onto y; disparity = 1 - (sum s)^2
+    return 1.0 - jnp.sum(s) ** 2
+
+
+@jax.jit
+def residual_variance(d_geo: jax.Array, y: jax.Array) -> jax.Array:
+    """1 - r^2 between geodesic distances and embedding distances
+    (Tenenbaum's residual-variance criterion)."""
+    d_emb = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum((y[:, None, :] - y[None, :, :]) ** 2, axis=-1), 0.0
+        )
+    )
+    a = d_geo.reshape(-1)
+    b = d_emb.reshape(-1)
+    a = a - a.mean()
+    b = b - b.mean()
+    r = jnp.sum(a * b) / jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))
+    return 1.0 - r**2

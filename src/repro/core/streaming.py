@@ -1,0 +1,46 @@
+"""Streaming-Isomap hook (paper SV: the authors' streaming method is
+"orthogonal to the one we present here, and in fact both methods could be
+combined in case when the initial batch is large").
+
+This module is that combination point: an exact Isomap run over the large
+initial batch (this framework) produces (X_base, geodesics A, embedding Y);
+``map_new_points`` then places stream arrivals on the learned manifold in
+O(k n) per point - kNN against the base set, one min-plus relaxation
+through the base geodesics, and the L-Isomap triangulation against the
+embedding's eigenbasis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def map_new_points(
+    x_new: jax.Array,      # (m, D) stream arrivals
+    x_base: jax.Array,     # (n, D) initial batch
+    a_base: jax.Array,     # (n, n) exact geodesics of the initial batch
+    y_base: jax.Array,     # (n, d) embedding of the initial batch
+    *,
+    k: int = 10,
+):
+    """Returns (m, d) coordinates for the new points."""
+    # geodesic estimate: through the k nearest base anchors
+    d2 = ops.pairwise_sq_dists(x_new, x_base)            # (m, n)
+    neg, idx = jax.lax.top_k(-d2, k)                     # k anchors each
+    anchor_d = jnp.sqrt(jnp.maximum(-neg, 0.0))          # (m, k)
+    # d_geo(new, j) = min_a anchor_d[, a] + A[idx[, a], j]
+    geo = jnp.min(
+        anchor_d[:, :, None] + a_base[idx], axis=1
+    )                                                     # (m, n)
+
+    # L-Isomap triangulation against the base embedding's eigenbasis
+    lam = jnp.sum(y_base * y_base, axis=0) / y_base.shape[0]  # eigvals/n
+    pinv = y_base / (lam[None, :] * y_base.shape[0])     # (n, d) pseudo-inv
+    mean_sq = jnp.mean(jnp.square(a_base), axis=1)       # (n,)
+    y_new = -0.5 * (jnp.square(geo) - mean_sq[None, :]) @ pinv
+    return y_new

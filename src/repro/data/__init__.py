@@ -1,0 +1,6 @@
+from repro.data.manifolds import (  # noqa: F401
+    euler_isometric_swiss_roll,
+    swiss_roll_classic,
+    synthetic_emnist,
+)
+from repro.data.tokens import TokenPipeline, synthetic_token_batches  # noqa: F401

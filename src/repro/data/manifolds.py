@@ -1,0 +1,73 @@
+"""Benchmark datasets (paper SIV-A).
+
+* Euler Isometric Swiss Roll (Schoeneman et al. 2017, used by the paper):
+  2-D points pushed through an isometric spiral embedding into 3-D, so the
+  geodesic structure of the roll exactly matches the planar source - the
+  property that makes Procrustes-vs-source a valid exactness check.
+* Classic Swiss roll for comparison.
+* Synthetic EMNIST stand-in: the real 784-dim EMNIST images are not
+  bundled offline, so we generate cluster-structured 784-dim data with a
+  low-dimensional latent (random smooth maps of a 2-D latent per class),
+  which reproduces the workload shape (D=784, clusterable, d=2 target).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def euler_isometric_swiss_roll(
+    n: int, seed: int = 0, *, t_span: tuple[float, float] = (np.pi, 4 * np.pi)
+):
+    """Returns (x3d, latent2d) with an arc-length (isometric) spiral.
+
+    The spiral (r = t) is reparametrized by arc length so that distances
+    along the roll equal distances in the latent strip - Euler's method
+    integrates the arc length as in the streaming-Isomap paper.
+    """
+    rng = np.random.default_rng(seed)
+    t0, t1 = t_span
+    # integrate arc length s(t) = int sqrt(r^2 + (dr/dt)^2) dt with r = t
+    ts = np.linspace(t0, t1, 20001)
+    ds = np.sqrt(ts**2 + 1.0)
+    s = np.concatenate([[0.0], np.cumsum(0.5 * (ds[1:] + ds[:-1]) * np.diff(ts))])
+    total_len = s[-1]
+    # sample latent uniformly in (arc-length, height)
+    u = rng.uniform(0.0, total_len, n)
+    h = rng.uniform(0.0, 20.0, n)
+    # invert s(t) by interpolation
+    t = np.interp(u, s, ts)
+    x = np.stack([t * np.cos(t), h, t * np.sin(t)], axis=1)
+    latent = np.stack([u, h], axis=1)
+    return x.astype(np.float32), latent.astype(np.float32)
+
+
+def swiss_roll_classic(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    t = 1.5 * np.pi * (1 + 2 * rng.uniform(size=n))
+    h = 21.0 * rng.uniform(size=n)
+    x = np.stack([t * np.cos(t), h, t * np.sin(t)], axis=1)
+    return x.astype(np.float32), np.stack([t, h], axis=1).astype(np.float32)
+
+
+def synthetic_emnist(n: int, d_in: int = 784, classes: int = 10, seed: int = 0):
+    """Cluster-structured high-dimensional data with 2-D latent per class."""
+    rng = np.random.default_rng(seed)
+    per = n // classes
+    xs, ys = [], []
+    for c in range(classes):
+        latent = rng.normal(size=(per, 2))
+        w1 = rng.normal(size=(2, 32)) / np.sqrt(2)
+        w2 = rng.normal(size=(32, d_in)) / np.sqrt(32)
+        center = rng.normal(size=(d_in,)) * 2.0
+        x = np.tanh(latent @ w1) @ w2 + center
+        x += rng.normal(size=x.shape) * 0.05
+        xs.append(x)
+        ys.append(np.full(per, c))
+    rem = n - per * classes
+    if rem:
+        xs.append(xs[0][:rem])
+        ys.append(ys[0][:rem])
+    x = np.concatenate(xs)[:n].astype(np.float32)
+    y = np.concatenate(ys)[:n]
+    perm = rng.permutation(n)
+    return x[perm], y[perm]

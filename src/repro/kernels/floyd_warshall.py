@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: in-VMEM blocked Floyd-Warshall (APSP phase 1).
+
+The b x b diagonal block of the distance matrix lives entirely in VMEM and
+is swept with rank-1 min-plus updates, one per pivot k.  This is the
+critical-path step of the communication-avoiding APSP schedule (paper
+SIII-B / Solomonik et al.): it is sequential in k by nature, so the kernel
+keeps the whole working set on-core and the surrounding phases supply all
+the parallelism.
+
+Block sizes up to 4096 fit VMEM in f32 (4096^2 * 4 B = 64 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fw_kernel(d_ref, o_ref):
+    n = d_ref.shape[0]
+    d = d_ref[...]
+    # clamp the diagonal to zero (a node is at distance 0 from itself)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    d = jnp.where(ii == jj, 0.0, d)
+
+    def body(k, dist):
+        row = jax.lax.dynamic_slice(dist, (k, 0), (1, n))  # (1, n)
+        col = jax.lax.dynamic_slice(dist, (0, k), (n, 1))  # (n, 1)
+        return jnp.minimum(dist, col + row)
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def floyd_warshall(d: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """All-pairs shortest paths on a dense (b, b) block; inf = no edge."""
+    n, n2 = d.shape
+    assert n == n2, d.shape
+    return pl.pallas_call(
+        _fw_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), d.dtype),
+        interpret=interpret,
+    )(d)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: tropical (min-plus) matrix multiplication.
+
+This is the workhorse of the blocked Floyd-Warshall APSP solver (paper
+SIII-B): phases 2 and 3 are panel x panel min-plus products.  Min-plus is
+not expressible on the MXU (the systolic array only does *,+), so this is a
+VPU kernel: for each (bm, bn) output tile we loop over the contraction
+dimension in VMEM, applying rank-1 `min(acc, a[:,k] + b[k,:])` updates.
+
+Tiling: grid (m/bm, n/bn, k/bk) with the contraction innermost; the output
+tile is initialized at k-step 0 and accumulated in place across k-steps
+(the standard Pallas accumulation pattern).  VMEM footprint per step is
+bm*bk + bk*bn + bm*bn floats - e.g. 256/256/256 f32 = 768 KiB, far under
+the ~128 MiB v5e VMEM, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tpu_compiler_params():
+    """dimension_semantics hint for the TPU Pallas pipeline (None off-TPU)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams", None
+        )
+        if cls is not None:
+            return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except ImportError:
+        pass
+    return None
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, unroll: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    bm, bn = o_ref.shape
+
+    # Rank-`unroll` min-plus updates: reshape the contraction into
+    # (bk/unroll, unroll) and reduce `unroll` lanes per loop step. This keeps
+    # the VPU busy with (unroll, bm, bn) element-wise work per iteration
+    # while bounding the live intermediate.
+    def body(i, acc):
+        ak = jax.lax.dynamic_slice(a, (0, i * unroll), (bm, unroll))
+        bk_ = jax.lax.dynamic_slice(b, (i * unroll, 0), (unroll, bn))
+        part = jnp.min(ak.T[:, :, None] + bk_[:, None, :], axis=0)
+        return jnp.minimum(acc, part)
+
+    acc = jnp.full((bm, bn), jnp.inf, dtype=o_ref.dtype)
+    acc = jax.lax.fori_loop(0, bk // unroll, body, acc)
+    o_ref[...] = jnp.minimum(o_ref[...], acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "unroll", "interpret")
+)
+def minplus(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    unroll: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[i,j] = min_k A[i,k] + B[k,j].  Shapes (m,k) x (k,n) -> (m,n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    unroll = min(unroll, bk)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tile ({bm},{bk},{bn})"
+    )
+    assert bk % unroll == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_minplus_kernel, bk=bk, unroll=unroll)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        compiler_params=_tpu_compiler_params(),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the Pallas kernels run natively; everywhere else (this
+container is CPU) they execute in interpret mode or fall back to the pure
+jnp references, selectable via ``mode``:
+
+  - "auto":     pallas on TPU, reference elsewhere (default; used by the
+                distributed paths so dry-run lowering stays pure-XLA)
+  - "pallas":   force the Pallas kernel (interpret=True off-TPU) - used by
+                the kernel test suite
+  - "ref":      force the jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.floyd_warshall import floyd_warshall as _fw_pallas
+from repro.kernels.minplus import minplus as _mp_pallas
+from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if mode == "auto":
+        return (True, False) if _on_tpu() else (False, False)
+    if mode == "pallas":
+        return True, not _on_tpu()
+    if mode == "ref":
+        return False, False
+    raise ValueError(f"unknown kernel mode {mode!r}")
+
+
+def minplus(a, b, *, mode: str = "auto", **tile_kw):
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _mp_pallas(a, b, interpret=interpret, **tile_kw)
+    return _ref.minplus_ref(a, b)
+
+
+def floyd_warshall(d, *, mode: str = "auto"):
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _fw_pallas(d, interpret=interpret)
+    return _ref.floyd_warshall_ref(d)
+
+
+def pairwise_sq_dists(x, y, *, mode: str = "auto", **tile_kw):
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _pd_pallas(x, y, interpret=interpret, **tile_kw)
+    return _ref.pairwise_sq_dists_ref(x, y)

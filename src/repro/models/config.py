@@ -1,0 +1,98 @@
+"""Model configuration dataclasses shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models.moe import MoEConfig
+from repro.models.ssm import MambaConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPattern:
+    mixer: str          # attn | mamba | mlstm | slstm
+    ffn: str = "mlp"    # mlp | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    kind: str = "causal_lm"            # causal_lm | encdec
+    family: str = "dense"              # dense | moe | hybrid | ssm | audio | vlm
+    head_dim: int | None = None
+    mlp_kind: str = "swiglu"
+    norm: str = "rms"
+    rope_theta: float | None = 10_000.0
+    mrope_sections: tuple[int, int, int] | None = None
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    embed_scale: bool = False          # gemma: h *= sqrt(d_model)
+    pattern: tuple[LayerPattern, ...] = (LayerPattern("attn", "mlp"),)
+    moe: MoEConfig | None = None
+    mamba: MambaConfig | None = None
+    # encoder-decoder (whisper): encoder depth + fixed frame count (stub
+    # frontend supplies (B, enc_seq, d_model) embeddings)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # vision stub (qwen2-vl): number of prepended patch tokens
+    vision_tokens: int = 0
+    # runtime knobs
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32  # bf16 for serving (halves weight reads)
+    kv_dtype: Any = jnp.bfloat16   # int8 halves decode cache traffic
+    remat: bool = True
+    attn_chunk: int = 1024
+    scan_chunk: int = 256              # ssm / mlstm chunk length
+    # long-context (500k decode) eligibility: sub-quadratic sequence mixing
+    long_context_ok: bool = False
+    source: str = ""                   # provenance note
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.pattern) == 0, (
+            self.name, self.n_layers, len(self.pattern)
+        )
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style vocab padding to a multiple of 128 so the vocab
+        dim always shards over a 16-way TP axis (granite's 49155 / whisper's
+        51865 would otherwise replicate the full logits)."""
+        return (self.vocab + 127) // 128 * 128
+
+    @property
+    def periods(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                          # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.step == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

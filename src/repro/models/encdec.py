@@ -1,0 +1,256 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed (B, enc_seq, d_model) frame embeddings.  The transformer
+backbone is faithful: pre-LN layernorm blocks, GELU MLPs, attention with
+biases, sinusoidal encoder positions, learned decoder positions, causal
+decoder self-attention plus cross-attention to the encoder output.
+
+Note (DESIGN.md assumption log): Whisper's decoder context is 448 tokens;
+the assigned shapes drive it to 4k/32k, so the learned positional table is
+sized to the shape, not to 448.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.transformer import _cast_specs, _stack_specs, cross_entropy
+from repro.sharding import ParamSpec
+
+Tree = dict[str, Any]
+
+
+class EncDecLM:
+    """Encoder-decoder LM.  Uses cfg.enc_layers encoder + cfg.n_layers
+    decoder layers."""
+
+    def __init__(self, cfg: ModelConfig, rules=None, max_pos: int = 32_768):
+        self.cfg = cfg
+        self.rules = rules
+        self.max_pos = max_pos
+
+    def _constrain(self, x, logical):
+        if self.rules is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.rules.sharding(x.shape, logical)
+        )
+
+    # ------------------------------------------------------------ specs --
+
+    def _attn_specs(self):
+        cfg = self.cfg
+        return layers.attention_specs(
+            cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim,
+            bias=cfg.attn_bias,
+        )
+
+    def _enc_layer_specs(self) -> Tree:
+        cfg = self.cfg
+        return {
+            "norm1": layers.layernorm_specs(cfg.d_model),
+            "attn": self._attn_specs(),
+            "norm2": layers.layernorm_specs(cfg.d_model),
+            "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+        }
+
+    def _dec_layer_specs(self) -> Tree:
+        cfg = self.cfg
+        return {
+            "norm1": layers.layernorm_specs(cfg.d_model),
+            "self_attn": self._attn_specs(),
+            "norm_x": layers.layernorm_specs(cfg.d_model),
+            "cross_attn": self._attn_specs(),
+            "norm2": layers.layernorm_specs(cfg.d_model),
+            "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+        }
+
+    def param_specs(self) -> Tree:
+        # Whisper ties the unembedding to the token embedding.
+        cfg = self.cfg
+        return _cast_specs({
+            "embed": layers.embedding_specs(cfg.padded_vocab, cfg.d_model),
+            "pos_embed": ParamSpec(
+                (self.max_pos, cfg.d_model), (None, "embed"), init="normal"
+            ),
+            "enc_blocks": _stack_specs(self._enc_layer_specs(), cfg.enc_layers),
+            "enc_norm": layers.layernorm_specs(cfg.d_model),
+            "dec_blocks": _stack_specs(self._dec_layer_specs(), cfg.n_layers),
+            "final_norm": layers.layernorm_specs(cfg.d_model),
+        }, cfg.param_dtype)
+
+    # ----------------------------------------------------------- encode --
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, enc_seq, d_model) stub embeddings -> encoder states."""
+        cfg = self.cfg
+        h = frames.astype(cfg.dtype)
+        h = h + layers.sinusoidal_pos(h.shape[1], cfg.d_model).astype(cfg.dtype)
+
+        def block(h, p):
+            hn = layers.layernorm(p["norm1"], h)
+            out, _ = layers.attention_apply(
+                p["attn"], hn, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                rope_theta=None, pos=None, mode="train", causal=False,
+            )
+            h = h + out
+            hn = layers.layernorm(p["norm2"], h)
+            h = h + layers.mlp_apply(p["mlp"], hn, "gelu")
+            return self._constrain(h, ("batch", None, "act_embed")), None
+
+        if cfg.remat:
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h, _ = jax.lax.scan(block, h, params["enc_blocks"])
+        return layers.layernorm(params["enc_norm"], h)
+
+    # ----------------------------------------------------------- decode --
+
+    def _dec_blocks(self, params, h, enc, *, mode, caches=None, kv_len=None):
+        cfg = self.cfg
+
+        def block(h, xs):
+            p, c = xs
+            hn = layers.layernorm(p["norm1"], h)
+            out, new_self = layers.attention_apply(
+                p["self_attn"], hn, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                rope_theta=None, pos=None, mode=mode,
+                cache=None if c is None else c.get("self"),
+                kv_len=kv_len, chunk=cfg.attn_chunk,
+            )
+            h = h + out
+            hn = layers.layernorm(p["norm_x"], h)
+            if mode == "decode":
+                out, _ = layers.attention_apply(
+                    p["cross_attn"], hn, n_heads=cfg.n_heads,
+                    kv_heads=cfg.kv_heads, rope_theta=None, pos=None,
+                    mode="decode", cache=c["cross"], kv_len=None, cross=True,
+                )
+                new_cross = c["cross"]
+            else:
+                out, new_cross = layers.attention_apply(
+                    p["cross_attn"], hn, n_heads=cfg.n_heads,
+                    kv_heads=cfg.kv_heads, rope_theta=None, pos=None,
+                    mode=mode, xkv=enc,
+                )
+            h = h + out
+            hn = layers.layernorm(p["norm2"], h)
+            h = h + layers.mlp_apply(p["mlp"], hn, "gelu")
+            if mode in ("train", "prefill"):
+                h = self._constrain(h, ("batch", "sp_seq", "act_embed"))
+            new_c = (
+                {"self": new_self, "cross": new_cross}
+                if new_self is not None
+                else None
+            )
+            return h, new_c
+
+        body = block
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h, new_caches = jax.lax.scan(body, h, (params["dec_blocks"], caches))
+        return h, new_caches
+
+    def _unembed(self, params, h):
+        logits = layers.unembed(params["embed"], h)
+        cfg = self.cfg
+        if cfg.padded_vocab > cfg.vocab:
+            logits = jnp.where(
+                jnp.arange(cfg.padded_vocab) >= cfg.vocab, -1e9, logits
+            )
+        return logits
+
+    def _embed_dec(self, params, tokens, offset):
+        cfg = self.cfg
+        h = layers.embed(params["embed"], tokens, cfg.dtype)
+        pos = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], offset, tokens.shape[1], axis=0
+        ) if isinstance(offset, int) else None
+        if pos is not None:
+            h = h + pos.astype(cfg.dtype)[None]
+        else:  # per-batch offsets (decode)
+            p = params["pos_embed"][offset]                   # (B, d)
+            h = h + p.astype(cfg.dtype)[:, None, :]
+        return h
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        enc = self.encode(params, batch["frames"])
+        h = self._embed_dec(params, inputs, 0)
+        h, _ = self._dec_blocks(params, h, enc, mode="train")
+        h = layers.layernorm(params["final_norm"], h)
+        logits = layers.unembed(params["embed"], h)
+        logits = self._constrain(logits, ("batch", None, "act_vocab"))
+        ce = cross_entropy(logits, targets, vocab=cfg.vocab)
+        return ce, {"ce": ce, "loss": ce}
+
+    def prefill(self, params, batch, *, pad_to: int | None = None):
+        enc = self.encode(params, batch["frames"])
+        h = self._embed_dec(params, batch["tokens"], 0)
+        s = h.shape[1]
+        h, caches = self._dec_blocks(params, h, enc, mode="prefill")
+        h = layers.layernorm(params["final_norm"], h[:, -1:])
+        if pad_to is not None and pad_to > s:
+            caches["self"] = jax.tree.map(
+                lambda x: jnp.pad(
+                    x, ((0, 0), (0, 0), (0, pad_to - s), (0, 0), (0, 0))
+                ),
+                caches["self"],
+            )
+        return self._unembed(params, h), caches
+
+    def decode_step(self, params, batch):
+        token, kv_len, caches = batch["token"], batch["kv_len"], batch["cache"]
+        h = self._embed_dec(params, token, kv_len)
+        h, new_caches = self._dec_blocks(
+            params, h, None, mode="decode", caches=caches, kv_len=kv_len
+        )
+        h = layers.layernorm(params["final_norm"], h)
+        return self._unembed(params, h), new_caches
+
+    def cache_specs(self, batch: int, seq: int, *, long: bool = False) -> Tree:
+        cfg = self.cfg
+        kv = (batch, seq, cfg.kv_heads, cfg.resolved_head_dim)
+        xkv = (batch, cfg.enc_seq, cfg.kv_heads, cfg.resolved_head_dim)
+        log = ("batch", "long_seq" if long else "cache_seq", "kv_heads", "head_dim")
+        xlog = ("batch", None, "kv_heads", "head_dim")
+        layer = {
+            "self": {
+                "k": ParamSpec(kv, log, init="zeros", dtype=jnp.bfloat16),
+                "v": ParamSpec(kv, log, init="zeros", dtype=jnp.bfloat16),
+            },
+            "cross": {
+                "k": ParamSpec(xkv, xlog, init="zeros", dtype=jnp.bfloat16),
+                "v": ParamSpec(xkv, xlog, init="zeros", dtype=jnp.bfloat16),
+            },
+        }
+        return _stack_specs(layer, cfg.n_layers)
+
+    def active_params(self) -> int:
+        import numpy as np
+
+        def count(tree):
+            return sum(
+                int(np.prod(s.shape))
+                for s in jax.tree.leaves(
+                    tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+                )
+            )
+
+        cfg = self.cfg
+        return (
+            count(self._enc_layer_specs()) * cfg.enc_layers
+            + count(self._dec_layer_specs()) * cfg.n_layers
+            + cfg.d_model * cfg.vocab
+        )

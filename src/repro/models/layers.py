@@ -1,0 +1,401 @@
+"""Shared transformer layers: norms, rotary embeddings, GQA attention
+(full / chunked / cached-decode), MLP variants, embeddings.
+
+All modules are pure functions over ParamSpec trees (see repro.sharding):
+``*_specs(cfg)`` declares parameters with logical sharding axes and
+``*_apply(params, ...)`` computes.  Activations are bf16 by default with
+f32 norms/softmax; parameters are f32 masters.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ParamSpec
+
+Tree = dict[str, Any]
+
+# --------------------------------------------------------------- norms ----
+
+
+def rmsnorm_specs(d: int) -> Tree:
+    return {"scale": ParamSpec((d,), ("act_embed",), init="ones")}
+
+
+def rmsnorm(p: Tree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_specs(d: int) -> Tree:
+    return {
+        "scale": ParamSpec((d,), ("act_embed",), init="ones"),
+        "bias": ParamSpec((d,), ("act_embed",), init="zeros"),
+    }
+
+
+def layernorm(p: Tree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rms":
+        return rmsnorm_specs(d), rmsnorm
+    if kind == "layer":
+        return layernorm_specs(d), layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- rope ----
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                    # (hd/2,)
+    angles = pos[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections=(16, 24, 24)
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  pos3: (..., S, 3) (t, h, w) positions;
+    `sections` partitions the hd/2 frequency lanes among the 3 axes."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2
+    )                                                   # (hd/2,) in {0,1,2}
+    pos_sel = jnp.take(pos3.astype(jnp.float32), sec_id, axis=-1)  # (...,S,hd/2)
+    angles = pos_sel[..., None, :] * freqs              # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d)
+    )
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------- attention ----
+
+
+def attention_specs(
+    d: int, n_heads: int, kv_heads: int, head_dim: int, *, bias: bool = False
+) -> Tree:
+    s: Tree = {
+        "wq": ParamSpec(
+            (d, n_heads, head_dim), ("embed", "heads", "head_dim"),
+            init="scaled",
+        ),
+        "wk": ParamSpec(
+            (d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim"),
+            init="scaled",
+        ),
+        "wv": ParamSpec(
+            (d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim"),
+            init="scaled",
+        ),
+        "wo": ParamSpec(
+            (n_heads, head_dim, d), ("heads", "head_dim", "embed"),
+            init="scaled", fan_axis=1,
+        ),
+    }
+    if bias:
+        s["bq"] = ParamSpec((n_heads, head_dim), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B,S,KVH,hd) -> (B,S,KVH*groups,hd)"""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, h, groups, d)
+    ).reshape(b, s, h * groups, d)
+
+
+def full_causal_attention(q, k, v, *, scale, pos_q=None, pos_k=None):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,H,hd).  Causal when pos arrays are given."""
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if pos_q is not None:
+        mask = pos_q[:, None, :, None] >= pos_k[:, None, None, :]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_causal_attention(q, k, v, *, scale, chunk: int = 1024):
+    """Memory-efficient causal attention: O(S*chunk) live memory.
+
+    Scans over KV chunks with a running (max, sum, acc) triple - the
+    flash-attention recurrence in pure XLA, used for long-prefill shapes
+    where materializing (S, S) logits would blow HBM.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    nchunk = sk // chunk
+    qpos = jnp.arange(sq)
+
+    def body(carry, ck):
+        m, l, acc = carry
+        kc, vc, k0 = ck
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32
+        ) * scale
+        kpos = k0 + jnp.arange(chunk)
+        mask = qpos[None, None, :, None] >= kpos[None, None, None, :]
+        logits = jnp.where(mask, logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard fully-masked rows (m_new = -inf) against NaNs
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    kc = k.reshape(b, nchunk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    k0s = jnp.arange(nchunk) * chunk
+    init = (
+        jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        jnp.zeros((b, h, sq, hd), jnp.float32),
+    )
+    # remat the chunk body: without it AD saves the (nchunk, B, H, Sq,
+    # chunk) probability tensors - the full quadratic memory the chunking
+    # exists to avoid
+    body = jax.checkpoint(body)
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, k0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+def decode_attention(q, k_cache, v_cache, *, scale, kv_len):
+    """Single-token decode: q (B,1,H,hd) vs cache (B,S,H,hd); positions
+    >= kv_len are masked.  Softmax reductions over the (possibly sharded)
+    cache sequence axis partition cleanly under GSPMD (psum of max/sum)."""
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = k_cache.shape[1]
+    mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+
+
+def _kv_quant(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of a (B,S,H,hd) KV
+    tensor.  Halves (vs bf16) the decode-time cache traffic - decode is
+    HBM-bound on cache reads, so this moves the dominant roofline term."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def attention_apply(
+    p: Tree,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    kv_heads: int,
+    rope_theta: float | None,
+    pos: jax.Array,
+    mode: str = "train",          # train | prefill | decode
+    cache: Tree | None = None,
+    kv_len: jax.Array | None = None,
+    chunk: int = 1024,
+    mrope_sections=None,
+    causal: bool = True,
+    xkv: jax.Array | None = None,  # cross-attention source
+    cross: bool = False,           # decode against a fixed cross K/V cache
+    kv_dtype=None,                 # jnp.int8 enables quantized KV caches
+):
+    """Returns (out, new_cache).  x: (B,S,d)."""
+    b, s, _ = x.shape
+    compute = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
+    src = x if xkv is None else xkv
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(compute))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(compute))
+    if "bq" in p:
+        q = q + p["bq"].astype(compute)
+        k = k + p["bk"].astype(compute)
+        v = v + p["bv"].astype(compute)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    if rope_theta is not None and xkv is None:
+        if mrope_sections is not None:
+            q = apply_mrope(q, pos, rope_theta, mrope_sections)
+            k = apply_mrope(k, pos, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, pos, rope_theta)
+            k = apply_rope(k, pos, rope_theta)
+    groups = n_heads // kv_heads
+
+    if mode == "decode" and not cross:
+        assert cache is not None
+        quantized = "k_scale" in cache
+        write = (
+            jnp.arange(cache["k"].shape[1])[None, :, None, None]
+            == kv_len[:, None, None, None]
+        )
+        if quantized:
+            kq, ks = _kv_quant(k[:, :1])
+            vq, vs = _kv_quant(v[:, :1])
+            k_cache = jnp.where(write, kq, cache["k"])
+            v_cache = jnp.where(write, vq, cache["v"])
+            k_sc = jnp.where(write, ks, cache["k_scale"])
+            v_sc = jnp.where(write, vs, cache["v_scale"])
+            k_full = _kv_dequant(k_cache, k_sc, compute)
+            v_full = _kv_dequant(v_cache, v_sc, compute)
+            new_cache = {
+                "k": k_cache, "v": v_cache, "k_scale": k_sc, "v_scale": v_sc
+            }
+        else:
+            k_cache = jnp.where(write, k[:, :1].astype(cache["k"].dtype), cache["k"])
+            v_cache = jnp.where(write, v[:, :1].astype(cache["v"].dtype), cache["v"])
+            k_full = k_cache.astype(compute)
+            v_full = v_cache.astype(compute)
+            new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(
+            q,
+            _repeat_kv(k_full, groups),
+            _repeat_kv(v_full, groups),
+            scale=scale,
+            kv_len=kv_len + 1,
+        )
+    elif mode == "decode":  # cross-attention: cache holds fixed encoder K/V
+        out = decode_attention(
+            q,
+            _repeat_kv(cache["k"].astype(compute), groups),
+            _repeat_kv(cache["v"].astype(compute), groups),
+            scale=scale,
+            kv_len=jnp.full((b,), cache["k"].shape[1]),
+        )
+        new_cache = cache
+    else:
+        kr = _repeat_kv(k, groups)
+        vr = _repeat_kv(v, groups)
+        if not causal or xkv is not None:
+            out = full_causal_attention(q, kr, vr, scale=scale)
+        elif s > chunk:
+            out = chunked_causal_attention(q, kr, vr, scale=scale, chunk=chunk)
+        else:
+            pos_b = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            out = full_causal_attention(
+                q, kr, vr, scale=scale, pos_q=pos_b, pos_k=pos_b
+            )
+        if mode == "prefill":
+            if kv_dtype == jnp.int8:
+                kq, ks = _kv_quant(k)
+                vq, vs = _kv_quant(v)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k, "v": v}
+        else:
+            new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return y, new_cache
+
+
+# ------------------------------------------------------------------ mlp ----
+
+
+def mlp_specs(d: int, d_ff: int, kind: str) -> Tree:
+    gated = kind in ("swiglu", "geglu")
+    s: Tree = {
+        "w_up": ParamSpec((d, d_ff), ("embed", "mlp"), init="scaled"),
+        "w_down": ParamSpec((d_ff, d), ("mlp", "embed"), init="scaled"),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d, d_ff), ("embed", "mlp"), init="scaled")
+    return s
+
+
+def mlp_apply(p: Tree, x: jax.Array, kind: str) -> jax.Array:
+    compute = x.dtype
+    up = x @ p["w_up"].astype(compute)
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(compute)) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(compute), approximate=True) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(kind)
+    return h @ p["w_down"].astype(compute)
+
+
+# ------------------------------------------------------------ embedding ----
+
+
+def embedding_specs(vocab: int, d: int) -> Tree:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def embed(p: Tree, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Tree, h: jax.Array) -> jax.Array:
+    """Logits in f32 (loss numerics)."""
+    return jnp.einsum(
+        "bsd,vd->bsv", h, p["table"], preferred_element_type=jnp.float32
+    )
+
+
+def lm_head_specs(d: int, vocab: int) -> Tree:
+    return {"w": ParamSpec((d, vocab), ("embed", "vocab"), init="scaled")}
+
+
+def lm_head(p: Tree, h: jax.Array) -> jax.Array:
+    return jnp.einsum(
+        "bsd,dv->bsv", h, p["w"], preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,119 @@
+"""Model registry + per-(arch, shape) input specs for train/prefill/decode.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(dry-run contract: weak-type-correct, shardable, no device allocation),
+together with the step kind so the launcher knows which function to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import TransformerLM
+from repro.sharding import LogicalRules, ParamSpec, eval_shape_tree
+
+Tree = dict[str, Any]
+
+
+def build_model(cfg: ModelConfig, rules=None):
+    if cfg.kind == "encdec":
+        return EncDecLM(cfg, rules=rules)
+    return TransformerLM(cfg, rules=rules)
+
+
+@dataclasses.dataclass
+class StepInputs:
+    """Inputs of one lowered step function."""
+
+    step: str                  # train | prefill | decode
+    batch: Tree                # ShapeDtypeStructs
+    batch_logical: Tree        # logical axes per input, for shardings
+
+    def shardings(self, rules: LogicalRules) -> Tree:
+        # batch's leaves are ShapeDtypeStructs; the logical tree mirrors its
+        # structure with tuples of axis names at the leaf positions (tree_map
+        # flattens the second tree only down to the first tree's leaves).
+        return jax.tree.map(
+            lambda sds, log: rules.sharding(sds.shape, log),
+            self.batch,
+            self.batch_logical,
+        )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> StepInputs:
+    b, s = shape.global_batch, shape.seq_len
+    long = shape.name == "long_500k"
+    model = build_model(cfg)
+
+    if shape.step == "train":
+        batch: Tree = {"tokens": _sds((b, s + 1), jnp.int32)}
+        logical: Tree = {"tokens": ("batch", "seq")}
+        if cfg.kind == "encdec":
+            batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            logical["frames"] = ("batch", "seq", "act_embed")
+        if cfg.vision_tokens:
+            # text tokens shrink so vision + text fill the assigned seq_len
+            batch["tokens"] = _sds((b, s - cfg.vision_tokens + 1), jnp.int32)
+            batch["patches"] = _sds(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+            logical["patches"] = ("batch", "seq", "act_embed")
+        return StepInputs("train", batch, logical)
+
+    if shape.step == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        logical = {"tokens": ("batch", "seq")}
+        if cfg.kind == "encdec":
+            batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            logical["frames"] = ("batch", "seq", "act_embed")
+        if cfg.vision_tokens:
+            batch["tokens"] = _sds((b, s - cfg.vision_tokens), jnp.int32)
+            batch["patches"] = _sds(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+            logical["patches"] = ("batch", "seq", "act_embed")
+        return StepInputs("prefill", batch, logical)
+
+    # decode: one new token against a seq_len cache
+    cache_specs = model.cache_specs(b, s, long=long)
+    cache_sds = eval_shape_tree(cache_specs)
+    cache_logical = jax.tree.map(
+        lambda p: p.logical, cache_specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    batch = {
+        "token": _sds((b, 1), jnp.int32),
+        "kv_len": _sds((b,), jnp.int32),
+        "cache": cache_sds,
+    }
+    logical = {
+        "token": ("batch", None),
+        "kv_len": ("batch",),
+        "cache": cache_logical,
+    }
+    return StepInputs("decode", batch, logical)
+
+
+def step_fn(cfg: ModelConfig, step: str):
+    """The pure function to lower for a given step kind (no optimizer -
+    see launch.train for the optimizer-wrapped train step)."""
+    model = build_model(cfg)
+    if step == "train":
+        def train_loss(params, batch):
+            return model.loss(params, batch)
+
+        return train_loss
+    if step == "prefill":
+        return model.prefill
+    if step == "decode":
+        return model.decode_step
+    raise ValueError(step)

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: top-k router with capacity-based dispatch.
+
+Dispatch is expressed as dense einsums against a (B, S, E, C) one-hot
+dispatch tensor (MaxText-style).  This keeps the layer a pure XLA dataflow
+graph - GSPMD can shard the expert dimension (EP) or the per-expert FFN
+dimension (expert-TP) freely, and there is no data-dependent shape anywhere
+(tokens over capacity C are dropped, the standard trade).
+
+Supports shared experts (Qwen2-MoE: always-on dense experts added to the
+routed output) and emits the load-balancing + router-z auxiliary losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding import ParamSpec
+
+Tree = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                   # per-expert hidden size
+    n_shared: int = 0           # always-on experts (fused into one MLP)
+    capacity_factor: float = 1.25
+    mlp_kind: str = "swiglu"
+    aux_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-3
+
+
+def moe_specs(d: int, cfg: MoEConfig) -> Tree:
+    e, f = cfg.n_experts, cfg.d_ff
+    s: Tree = {
+        "router": ParamSpec((d, e), ("embed", None), init="scaled"),
+        "w_up": ParamSpec(
+            (e, d, f), ("experts", "embed", "mlp"), init="scaled", fan_axis=1
+        ),
+        "w_down": ParamSpec(
+            (e, f, d), ("experts", "mlp", "embed"), init="scaled", fan_axis=1
+        ),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        s["w_gate"] = ParamSpec(
+            (e, d, f), ("experts", "embed", "mlp"), init="scaled", fan_axis=1
+        )
+    if cfg.n_shared:
+        s["shared"] = layers.mlp_specs(d, cfg.n_shared * f, cfg.mlp_kind)
+    return s
+
+
+def _expert_ffn(p: Tree, x: jax.Array, kind: str) -> jax.Array:
+    """x: (B, E, C, d) -> (B, E, C, d), batched over experts."""
+    compute = x.dtype
+    up = jnp.einsum("becd,edf->becf", x, p["w_up"].astype(compute))
+    if kind == "swiglu":
+        h = jax.nn.silu(
+            jnp.einsum("becd,edf->becf", x, p["w_gate"].astype(compute))
+        ) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(
+            jnp.einsum("becd,edf->becf", x, p["w_gate"].astype(compute)),
+            approximate=True,
+        ) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("becf,efd->becd", h, p["w_down"].astype(compute))
+
+
+def moe_apply(p: Tree, x: jax.Array, cfg: MoEConfig, constrain=None):
+    """x: (B, S, d) -> (out, aux_losses dict).
+
+    `constrain(x, logical_axes)` (optional) pins the dispatch/expert
+    activations: experts shard over the TP axis when the count divides
+    (expert parallelism), otherwise the capacity dim picks the axis up -
+    without this GSPMD replicates the (B, S, E, C) dispatch tensors, which
+    dominate memory at Jamba/Qwen scale.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    compute = x.dtype
+    cons = constrain or (lambda v, _log: v)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)            # (B,S,E) f32
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)      # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # capacity per batch row; multiple of 32 so the cap dim can shard over
+    # a 16-way mesh axis
+    cap = int(s * k / e * cfg.capacity_factor)
+    cap = max(32, (cap + 31) // 32 * 32)
+
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)      # (B,S,k,E)
+    mask = jnp.sum(sel, axis=2)                               # (B,S,E)
+    gates_e = jnp.sum(sel * gate_vals[..., None], axis=2)     # (B,S,E)
+    # position of each token within its expert's buffer
+    rank = jnp.cumsum(mask, axis=1) * mask                    # 1-based
+    keep = mask * (rank <= cap)
+    slot = (rank - 1.0) * keep                                # 0-based slot
+    disp = (
+        keep[..., None] * jax.nn.one_hot(slot.astype(jnp.int32), cap)
+    ).astype(compute)                                         # (B,S,E,C)
+    disp = cons(disp, ("batch", None, "experts", "cap"))
+
+    expert_in = jnp.einsum("bsec,bsd->becd", disp, x)         # (B,E,C,d)
+    expert_in = cons(expert_in, ("batch", "experts", "cap", None))
+    expert_out = _expert_ffn(p, expert_in, cfg.mlp_kind)      # (B,E,C,d)
+    expert_out = cons(expert_out, ("batch", "experts", "cap", None))
+    combine = disp * gates_e[..., None].astype(compute)       # (B,S,E,C)
+    out = jnp.einsum("bsec,becd->bsd", combine, expert_out)
+
+    if cfg.n_shared:
+        out = out + layers.mlp_apply(p["shared"], x, cfg.mlp_kind)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    frac_tokens = jnp.mean(mask, axis=(0, 1))                 # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))                 # (E,)
+    lb = e * jnp.sum(frac_tokens * frac_probs) / k
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {
+        "moe_load_balance": cfg.aux_loss_coef * lb,
+        "moe_z_loss": cfg.z_loss_coef * z,
+        "moe_drop_frac": 1.0 - jnp.sum(keep) / jnp.maximum(jnp.sum(mask), 1.0),
+    }
+    return out, aux

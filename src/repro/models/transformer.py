@@ -1,0 +1,390 @@
+"""TransformerLM: one decoder-only implementation covering the dense, MoE,
+hybrid (Mamba+attention, Jamba-style) and xLSTM architecture families via a
+per-period layer pattern.
+
+The layer stack is a `lax.scan` over `periods` (n_layers / len(pattern)):
+parameters and caches carry a leading `periods` axis, each scan step runs
+the pattern's slots in order.  This compiles one period regardless of depth
+(compile-time and HLO size stay O(pattern), essential when lowering 32-layer
+models for 512 devices) and is the natural pipeline-parallel boundary.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_mod, ssm, xlstm
+from repro.models.config import LayerPattern, ModelConfig
+from repro.sharding import ParamSpec
+
+Tree = dict[str, Any]
+
+
+def _stack_specs(tree: Tree, periods: int) -> Tree:
+    """Prepend a (replicated) periods axis to every ParamSpec."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (periods,) + s.shape, (None,) + s.logical, init=s.init,
+            dtype=s.dtype, scale=s.scale, fan_axis=s.fan_axis + 1,
+        ),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _cast_specs(tree: Tree, dtype) -> Tree:
+    """Override the master parameter dtype (bf16 for serving)."""
+    import dataclasses as _dc
+    import jax.numpy as _jnp
+
+    if dtype == _jnp.float32:
+        return tree
+    return jax.tree.map(
+        lambda s: _dc.replace(s, dtype=dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def cross_entropy(
+    logits: jax.Array, targets: jax.Array, vocab: int | None = None
+) -> jax.Array:
+    """Sharding-friendly CE: the target logit is picked with a one-hot
+    contraction, not a gather - a vocab-dim gather forces GSPMD to
+    replicate the (B, S, V) logits, which at 256k vocabularies is the
+    single largest activation in the model.  `vocab` masks padded vocab
+    entries (logit dim may be padded for TP divisibility)."""
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(lse - tgt)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, rules=None):
+        self.cfg = cfg
+        self.rules = rules  # optional LogicalRules for activation constraints
+
+    def _constrain(self, x, logical):
+        if self.rules is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.rules.sharding(x.shape, logical)
+        )
+
+    # ------------------------------------------------------------ specs --
+
+    def _slot_specs(self, pat: LayerPattern) -> Tree:
+        cfg = self.cfg
+        d = cfg.d_model
+        s: Tree = {"norm1": layers.make_norm(cfg.norm, d)[0]}
+        if pat.mixer == "attn":
+            s["mixer"] = layers.attention_specs(
+                d, cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim,
+                bias=cfg.attn_bias,
+            )
+        elif pat.mixer == "mamba":
+            s["mixer"] = ssm.mamba_specs(d, cfg.mamba)
+        elif pat.mixer == "mlstm":
+            s["mixer"] = xlstm.mlstm_specs(d, cfg.n_heads)
+        elif pat.mixer == "slstm":
+            s["mixer"] = xlstm.slstm_specs(d, cfg.n_heads)
+        else:
+            raise ValueError(pat.mixer)
+        if pat.ffn != "none":
+            s["norm2"] = layers.make_norm(cfg.norm, d)[0]
+            if pat.ffn == "mlp":
+                s["ffn"] = layers.mlp_specs(d, cfg.d_ff, cfg.mlp_kind)
+            elif pat.ffn == "moe":
+                s["ffn"] = moe_mod.moe_specs(d, cfg.moe)
+            else:
+                raise ValueError(pat.ffn)
+        return s
+
+    def param_specs(self) -> Tree:
+        cfg = self.cfg
+        blocks = {
+            f"slot{i}": self._slot_specs(p) for i, p in enumerate(cfg.pattern)
+        }
+        specs: Tree = {
+            "embed": layers.embedding_specs(cfg.padded_vocab, cfg.d_model),
+            "blocks": _stack_specs(blocks, cfg.periods),
+            "final_norm": layers.make_norm(cfg.norm, cfg.d_model)[0],
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = layers.lm_head_specs(
+                cfg.d_model, cfg.padded_vocab
+            )
+        return _cast_specs(specs, cfg.param_dtype)
+
+    # ------------------------------------------------------------ slots --
+
+    def _apply_slot(
+        self, i: int, pat: LayerPattern, p: Tree, h, *,
+        mode, pos, cache, kv_len,
+    ):
+        cfg = self.cfg
+        norm_fn = layers.rmsnorm if cfg.norm == "rms" else layers.layernorm
+        aux: Tree = {}
+        hn = norm_fn(p["norm1"], h)
+        if pat.mixer == "attn":
+            out, new_c = layers.attention_apply(
+                p["mixer"], hn,
+                n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                rope_theta=cfg.rope_theta, pos=pos, mode=mode,
+                cache=cache, kv_len=kv_len, chunk=cfg.attn_chunk,
+                mrope_sections=cfg.mrope_sections, kv_dtype=cfg.kv_dtype,
+            )
+        elif pat.mixer == "mamba":
+            out, new_c = ssm.mamba_apply(
+                p["mixer"], hn, cfg.mamba, mode=mode, cache=cache,
+                chunk=cfg.scan_chunk,
+            )
+        elif pat.mixer == "mlstm":
+            out, new_c = xlstm.mlstm_apply(
+                p["mixer"], hn, n_heads=cfg.n_heads, mode=mode, cache=cache,
+                chunk=cfg.scan_chunk,
+            )
+        else:
+            out, new_c = xlstm.slstm_apply(
+                p["mixer"], hn, n_heads=cfg.n_heads, mode=mode, cache=cache,
+            )
+        h = h + out
+        if pat.ffn != "none":
+            hn = norm_fn(p["norm2"], h)
+            if pat.ffn == "moe":
+                out, aux = moe_mod.moe_apply(
+                    p["ffn"], hn, cfg.moe, constrain=self._constrain
+                )
+            else:
+                out = layers.mlp_apply(p["ffn"], hn, cfg.mlp_kind)
+            h = h + out
+        return h, new_c, aux
+
+    def _run_blocks(self, params, h, *, mode, pos, caches=None, kv_len=None):
+        """Scan the stacked periods.  caches: tree with leading periods axis
+        per slot (or None)."""
+        cfg = self.cfg
+
+        # remat at SLOT granularity: the backward pass recomputes one
+        # layer's internals at a time.  Period-level remat keeps a whole
+        # period's (8 layers for Jamba) recomputed intermediates live at
+        # once, which multiplies the activation peak by the period length.
+        def run_slot(i, pat, p_slot, h, c):
+            return self._apply_slot(
+                i, pat, p_slot, h, mode=mode, pos=pos, cache=c, kv_len=kv_len
+            )
+
+        if cfg.remat and mode == "train":
+            run_slot = jax.checkpoint(
+                run_slot,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(0, 1),
+            )
+
+        def period(h, xs):
+            p_period, c_period = xs
+            new_caches = {}
+            auxes = {}
+            for i, pat in enumerate(cfg.pattern):
+                key = f"slot{i}"
+                c = c_period.get(key) if c_period is not None else None
+                h, new_c, aux = run_slot(i, pat, p_period[key], h, c)
+                if mode in ("train", "prefill"):
+                    # sequence-parallel residual stream: the per-slot
+                    # boundary activations (all that remat saves) shard S
+                    # over the TP axis; in prefill this also pins the batch
+                    # axis, which GSPMD otherwise drops around the chunked
+                    # attention scan
+                    h = self._constrain(h, ("batch", "sp_seq", "act_embed"))
+                if new_c is not None:
+                    new_caches[key] = new_c
+                for k, v in aux.items():
+                    auxes[k] = v
+            return h, (new_caches or None, auxes or None)
+
+        h, (new_caches, auxes) = jax.lax.scan(
+            period, h, (params["blocks"], caches)
+        )
+        return h, new_caches, auxes
+
+    # ------------------------------------------------------------- api ---
+
+    def _embed_inputs(self, params, tokens, patches=None):
+        cfg = self.cfg
+        h = layers.embed(params["embed"], tokens, cfg.dtype)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+        if cfg.vision_tokens and patches is not None:
+            h = jnp.concatenate([patches.astype(cfg.dtype), h], axis=1)
+        return h
+
+    def _positions(self, batch, seq, *, offset=0):
+        cfg = self.cfg
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, :] + offset, (batch, seq))
+        if cfg.mrope_sections is None:
+            return pos
+        # M-RoPE: vision tokens get (t=0, h, w) grid positions; text tokens
+        # get equal (t,h,w) continuing after the vision block.
+        tv = cfg.vision_tokens
+        side = max(int(math.sqrt(tv)), 1) if tv else 1
+        grid = jnp.arange(seq)
+        t = jnp.where(grid < tv, 0, grid - tv + (tv and side))
+        hh = jnp.where(grid < tv, grid // side, grid - tv + (tv and side))
+        ww = jnp.where(grid < tv, grid % side, grid - tv + (tv and side))
+        pos3 = jnp.stack([t, hh, ww], axis=-1)[None] + offset
+        return jnp.broadcast_to(pos3, (batch, seq, 3))
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = (
+            layers.rmsnorm if cfg.norm == "rms" else layers.layernorm
+        )(params["final_norm"], h)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], h)
+        else:
+            logits = layers.lm_head(params["lm_head"], h)
+        if cfg.padded_vocab > cfg.vocab:
+            logits = jnp.where(
+                jnp.arange(cfg.padded_vocab) >= cfg.vocab, -1e9, logits
+            )
+        return self._constrain(logits, ("batch", None, "act_vocab"))
+
+    def loss(self, params, batch):
+        """Next-token cross entropy.  batch: tokens (B, S+1) [+ patches]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        h = self._embed_inputs(params, inputs, batch.get("patches"))
+        h = self._constrain(h, ("batch", "seq", "act_embed"))
+        b, s, _ = h.shape
+        pos = self._positions(b, s)
+        h, _, auxes = self._run_blocks(params, h, mode="train", pos=pos)
+        logits = self._logits(params, h)
+        if cfg.vision_tokens:
+            logits = logits[:, cfg.vision_tokens:]
+        ce = cross_entropy(logits, targets, vocab=cfg.vocab)
+        metrics = {"ce": ce}
+        total = ce
+        if auxes:
+            for k, v in auxes.items():
+                vm = jnp.mean(v)
+                metrics[k] = vm
+                if k.startswith("moe") and "drop" not in k:
+                    total = total + vm
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(self, params, batch, *, pad_to: int | None = None):
+        """batch: tokens (B, S) [+ patches (B, Tv, d)].  Returns
+        (last-token logits, cache).  pad_to extends the KV caches so decode
+        steps can append (serving allocates prefix + generation budget)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = self._embed_inputs(params, tokens, batch.get("patches"))
+        b, s, _ = h.shape
+        pos = self._positions(b, s)
+        h, caches, _ = self._run_blocks(params, h, mode="prefill", pos=pos)
+        logits = self._logits(params, h[:, -1:])
+        if pad_to is not None and pad_to > s:
+            for i, pat in enumerate(cfg.pattern):
+                if pat.mixer != "attn":
+                    continue
+                key = f"slot{i}"
+                caches[key] = jax.tree.map(
+                    lambda x: jnp.pad(
+                        x, ((0, 0), (0, 0), (0, pad_to - s), (0, 0), (0, 0))
+                    ),
+                    caches[key],
+                )
+        return logits, caches
+
+    def decode_step(self, params, batch):
+        """batch: token (B, 1), kv_len (B,), cache.  One decode step."""
+        cfg = self.cfg
+        token, kv_len, caches = batch["token"], batch["kv_len"], batch["cache"]
+        h = self._embed_inputs(params, token)
+        b = h.shape[0]
+        if cfg.mrope_sections is None:
+            pos = kv_len[:, None]
+        else:
+            # text M-RoPE position for global cache index g: g - Tv + side
+            tv = cfg.vision_tokens
+            side = max(int(math.sqrt(tv)), 1) if tv else 0
+            mpos = kv_len - tv + side if tv else kv_len
+            pos = jnp.broadcast_to(mpos[:, None, None], (b, 1, 3))
+        h, new_caches, _ = self._run_blocks(
+            params, h, mode="decode", pos=pos, caches=caches, kv_len=kv_len
+        )
+        logits = self._logits(params, h)
+        return logits, new_caches
+
+    # ----------------------------------------------------------- cache ---
+
+    def cache_specs(self, batch: int, seq: int, *, long: bool = False) -> Tree:
+        """ParamSpec tree for the decode cache (leading periods axis)."""
+        cfg = self.cfg
+        seq_logical = "long_seq" if long else "cache_seq"
+        slots: Tree = {}
+        for i, pat in enumerate(cfg.pattern):
+            key = f"slot{i}"
+            if pat.mixer == "attn":
+                kv = (batch, seq, cfg.kv_heads, cfg.resolved_head_dim)
+                log = ("batch", seq_logical, "kv_heads", "head_dim")
+                slots[key] = {
+                    "k": ParamSpec(kv, log, init="zeros", dtype=cfg.kv_dtype),
+                    "v": ParamSpec(kv, log, init="zeros", dtype=cfg.kv_dtype),
+                }
+                if cfg.kv_dtype == jnp.int8:
+                    sc = (batch, seq, cfg.kv_heads, 1)
+                    slots[key]["k_scale"] = ParamSpec(
+                        sc, log, init="zeros", dtype=jnp.bfloat16
+                    )
+                    slots[key]["v_scale"] = ParamSpec(
+                        sc, log, init="zeros", dtype=jnp.bfloat16
+                    )
+            elif pat.mixer == "mamba":
+                slots[key] = ssm.mamba_cache_specs(cfg.d_model, cfg.mamba, batch)
+            elif pat.mixer == "mlstm":
+                slots[key] = xlstm.mlstm_cache_specs(cfg.d_model, cfg.n_heads, batch)
+            else:
+                slots[key] = xlstm.slstm_cache_specs(cfg.d_model, batch)
+        return _stack_specs(slots, cfg.periods)
+
+    def active_params(self) -> int:
+        """N for MODEL_FLOPS = 6*N*D: parameters touched per token
+        (MoE counts top_k/E of routed experts; embedding lookup excluded,
+        unembedding matmul included)."""
+        import numpy as np
+
+        cfg = self.cfg
+
+        def count(tree):
+            return sum(
+                int(np.prod(s.shape))
+                for s in jax.tree.leaves(
+                    tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+                )
+            )
+
+        total = 0
+        for i, pat in enumerate(cfg.pattern):
+            slot = self._slot_specs(pat)
+            if pat.ffn == "moe":
+                ffn = slot.pop("ffn")
+                routed = count({k: v for k, v in ffn.items() if k != "shared"})
+                frac = cfg.moe.top_k / cfg.moe.n_experts
+                total += int(routed * frac)
+                if "shared" in ffn:
+                    total += count(ffn["shared"])
+            total += count(slot)
+        total *= cfg.periods
+        total += cfg.d_model * cfg.vocab  # unembedding matmul
+        return total

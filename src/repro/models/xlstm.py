@@ -1,0 +1,270 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM: matrix-memory cell with exponential gating.  Training uses the
+paper's *parallel form* - an attention-like quadratic weighting with an
+additive log-decay matrix D[t,s] = F_t - F_s + i_s - computed here with a
+flash-style chunked scan over key/value chunks (O(S*chunk) live memory,
+same recurrence-rescaling trick as chunked softmax attention, but the
+normalizer is max(|row-sum|, exp(-m)) instead of a softmax partition).
+Decode is the O(1) recurrent cell on a (C, n, m) cache.
+
+sLSTM: scalar-memory cell with recurrent block-diagonal gating - inherently
+sequential, implemented as lax.scan over time (the recurrence is the point
+of the architecture; its state is O(d) so decode is trivially O(1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ParamSpec
+
+Tree = dict[str, Any]
+
+
+# ------------------------------------------------------------- mLSTM ------
+
+
+def mlstm_specs(d: int, n_heads: int) -> Tree:
+    hd = d // n_heads
+    return {
+        "wq": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wv": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wi": ParamSpec((d, n_heads), ("embed", "heads"), init="scaled"),
+        "wf": ParamSpec((d, n_heads), ("embed", "heads"), init="scaled"),
+        "bf": ParamSpec((n_heads,), ("heads",), init="ones"),
+        "wo_gate": ParamSpec((d, d), ("embed", "mlp"), init="scaled"),
+        "wo": ParamSpec((n_heads, hd, d), ("heads", "head_dim", "embed"), init="scaled", fan_axis=1),
+    }
+
+
+def _mlstm_parallel_chunked(q, k, v, i_pre, f_pre, *, chunk: int):
+    """q,k,v: (B,S,H,hd); i_pre,f_pre: (B,S,H).  Parallel mLSTM form."""
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        pad = chunk - s % chunk
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padw) for t in (q, k, v))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)))
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nchunk = s // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))     # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)                          # F_t
+    dterm = i_pre.astype(jnp.float32) - fcum                 # i_s - F_s
+
+    qt = q.transpose(0, 2, 1, 3)                             # (B,H,S,hd)
+    tpos = jnp.arange(s)
+
+    kc = k.reshape(b, nchunk, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nchunk, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    dc = dterm.reshape(b, nchunk, chunk, h).transpose(1, 0, 3, 2)
+    fq = fcum.transpose(0, 2, 1)                             # (B,H,S)
+
+    def body(carry, xs):
+        m, num, den = carry
+        kcc, vcc, dcc, c0 = xs
+        # D[t, s] = F_t + (i_s - F_s), causal
+        dmat = fq[..., :, None] + dcc[..., None, :]          # (B,H,S,chunk)
+        spos = c0 + jnp.arange(chunk)
+        causal = tpos[None, None, :, None] >= spos[None, None, None, :]
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(dmat, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        w = jnp.exp(dmat - m_safe[..., None])                # (B,H,S,chunk)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        scores = jnp.einsum(
+            "bhsd,bhcd->bhsc", qt.astype(jnp.float32), kcc.astype(jnp.float32)
+        ) * scale * w
+        num_new = num * corr[..., None] + jnp.einsum(
+            "bhsc,bhcd->bhsd", scores, vcc.astype(jnp.float32)
+        )
+        den_new = den * corr + jnp.sum(scores, axis=-1)
+        return (m_new, num_new, den_new), None
+
+    init = (
+        jnp.full((b, h, s), -jnp.inf, jnp.float32),
+        jnp.zeros((b, h, s, hd), jnp.float32),
+        jnp.zeros((b, h, s), jnp.float32),
+    )
+    c0s = jnp.arange(nchunk) * chunk
+    body = jax.checkpoint(body)  # don't save per-chunk score tensors for AD
+    (m, num, den), _ = jax.lax.scan(body, init, (kc, vc, dc, c0s))
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_safe))
+    out = num / denom[..., None]
+    return out.transpose(0, 2, 1, 3)[:, :s_orig]             # (B,S,H,hd)
+
+
+def mlstm_apply(
+    p: Tree,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    mode: str = "train",
+    cache: Tree | None = None,
+    chunk: int = 256,
+):
+    b, s, d = x.shape
+    hd = d // n_heads
+    compute = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute))
+    i_pre = jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(compute))
+    f_pre = jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(compute)) + p[
+        "bf"
+    ].astype(compute)
+
+    if mode == "decode":
+        assert cache is not None
+        scale = 1.0 / math.sqrt(hd)
+        logf = jax.nn.log_sigmoid(f_pre[:, 0].astype(jnp.float32))  # (B,H)
+        logi = i_pre[:, 0].astype(jnp.float32)
+        m_new = jnp.maximum(logf + cache["m"], logi)
+        fp = jnp.exp(logf + cache["m"] - m_new)
+        ip = jnp.exp(logi - m_new)
+        kf = k[:, 0].astype(jnp.float32) * scale
+        vf = v[:, 0].astype(jnp.float32)
+        c_new = fp[..., None, None] * cache["c"] + ip[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :]
+        )                                                    # (B,H,hd,hd)
+        n_new = fp[..., None] * cache["n"] + ip[..., None] * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)), jnp.exp(-m_new)
+        )
+        out = (num / den[..., None])[:, None]                # (B,1,H,hd)
+        new_cache = {"c": c_new, "n": n_new, "m": m_new}
+    else:
+        out = _mlstm_parallel_chunked(q, k, v, i_pre, f_pre, chunk=chunk)
+        new_cache = None
+        if mode == "prefill":
+            # Recurrent state after the whole prefix, accumulated with the
+            # same rescaled-running-max trick: with M = max_s (i_s - F_s),
+            # C_S = sum_s exp(i_s - F_s - M) k_s v_s^T and m_S = F_S + M.
+            scale = 1.0 / math.sqrt(hd)
+            logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+            fcum = jnp.cumsum(logf, axis=1)
+            dterm = i_pre.astype(jnp.float32) - fcum          # (B,S,H)
+            mrun = jnp.max(dterm, axis=1)                     # (B,H)
+            w = jnp.exp(dterm - mrun[:, None, :])             # (B,S,H)
+            kf = k.astype(jnp.float32) * scale
+            vf = v.astype(jnp.float32)
+            c_state = jnp.einsum("bsh,bshk,bshv->bhkv", w, kf, vf)
+            n_state = jnp.einsum("bsh,bshk->bhk", w, kf)
+            m_state = fcum[:, -1] + mrun
+            new_cache = {"c": c_state, "n": n_state, "m": m_state}
+
+    out = out.astype(compute) * jax.nn.silu(
+        x @ p["wo_gate"].astype(compute)
+    ).reshape(b, s, n_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return y, new_cache
+
+
+def mlstm_cache_specs(d: int, n_heads: int, batch: int) -> Tree:
+    hd = d // n_heads
+    return {
+        "c": ParamSpec((batch, n_heads, hd, hd), ("batch", "act_heads", None, None), init="zeros"),
+        "n": ParamSpec((batch, n_heads, hd), ("batch", "act_heads", None), init="zeros"),
+        "m": ParamSpec((batch, n_heads), ("batch", "act_heads"), init="zeros"),
+    }
+
+
+# ------------------------------------------------------------- sLSTM ------
+
+
+def slstm_specs(d: int, n_heads: int) -> Tree:
+    hd = d // n_heads
+    return {
+        # input projections for z, i, f, o
+        "wx": ParamSpec((d, 4, d), ("embed", None, "mlp"), init="scaled"),
+        # block-diagonal recurrent weights per head
+        "r": ParamSpec((n_heads, hd, 4, hd), ("heads", "head_dim", None, None), init="scaled", fan_axis=1),
+        "b": ParamSpec((4, d), (None, "mlp"), init="zeros"),
+        "wo": ParamSpec((d, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _slstm_cell(p, xt, state, *, n_heads, hd):
+    """One time step.  xt: (B,4,d) pre-projected input gates."""
+    h, c, n, m = state
+    hr = h.reshape(h.shape[0], n_heads, hd)
+    rec = jnp.einsum("bhk,hkgl->bghl", hr, p["r"].astype(h.dtype))
+    rec = rec.reshape(h.shape[0], 4, n_heads * hd)
+    pre = xt + rec + p["b"].astype(h.dtype)
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1].astype(jnp.float32)
+    ft = pre[:, 2].astype(jnp.float32)
+    ot = jax.nn.sigmoid(pre[:, 3])
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c_new = fp * c + ip * zt.astype(jnp.float32)
+    n_new = fp * n + ip
+    h_new = (ot.astype(jnp.float32) * c_new / jnp.maximum(n_new, 1e-6)).astype(h.dtype)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_apply(
+    p: Tree,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    mode: str = "train",
+    cache: Tree | None = None,
+):
+    b, s, d = x.shape
+    hd = d // n_heads
+    compute = x.dtype
+    xg = jnp.einsum("bsd,dge->bsge", x, p["wx"].astype(compute))  # (B,S,4,d)
+
+    if cache is None:
+        state = (
+            jnp.zeros((b, d), compute),
+            jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32),
+            jnp.full((b, d), -jnp.inf, jnp.float32),
+        )
+    else:
+        state = (cache["h"], cache["c"], cache["n"], cache["m"])
+
+    if mode == "decode":
+        state = _slstm_cell(p, xg[:, 0], state, n_heads=n_heads, hd=hd)
+        hs = state[0][:, None]
+    else:
+        def step(st, xt):
+            st = _slstm_cell(p, xt, st, n_heads=n_heads, hd=hd)
+            return st, st[0]
+
+        state, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2, 3))
+        hs = hs.transpose(1, 0, 2)                           # (B,S,d)
+
+    y = hs @ p["wo"].astype(compute)
+    new_cache = (
+        {"h": state[0], "c": state[1], "n": state[2], "m": state[3]}
+        if mode in ("decode", "prefill")
+        else None
+    )
+    return y, new_cache
+
+
+def slstm_cache_specs(d: int, batch: int) -> Tree:
+    return {
+        "h": ParamSpec((batch, d), ("batch", "act_mlp"), init="zeros", dtype=jnp.bfloat16),
+        "c": ParamSpec((batch, d), ("batch", "act_mlp"), init="zeros"),
+        "n": ParamSpec((batch, d), ("batch", "act_mlp"), init="zeros"),
+        "m": ParamSpec((batch, d), ("batch", "act_mlp"), init="zeros"),
+    }

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: tests run with the real single-CPU device count;
+only multi-device tests spawn subprocesses with XLA_FLAGS (so smoke tests
+and benches see 1 device, per the dry-run isolation requirement)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,97 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp
+oracle, swept over shapes and dtypes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.minplus import minplus as mp_pallas
+from repro.kernels.floyd_warshall import floyd_warshall as fw_pallas
+from repro.kernels.pairwise_dist import pairwise_sq_dists as pd_pallas
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk,unroll",
+    [
+        (32, 32, 32, 32, 32, 32, 4),
+        (64, 128, 96, 32, 32, 64, 8),
+        (128, 64, 128, 64, 64, 32, 8),
+        (256, 256, 256, 128, 128, 128, 16),
+        (8, 8, 8, 8, 8, 8, 1),
+    ],
+)
+def test_minplus_matches_ref(m, k, n, bm, bn, bk, unroll, rng):
+    a = rng.uniform(0, 10, (m, k)).astype(np.float32)
+    b = rng.uniform(0, 10, (k, n)).astype(np.float32)
+    want = np.min(a[:, :, None] + b[None, :, :], axis=1)
+    got = mp_pallas(a, b, bm=bm, bn=bn, bk=bk, unroll=unroll, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    np.testing.assert_allclose(ref.minplus_ref(a, b), want, rtol=1e-6)
+
+
+def test_minplus_with_inf(rng):
+    a = rng.uniform(0, 5, (32, 32)).astype(np.float32)
+    a[a < 1.0] = np.inf
+    b = rng.uniform(0, 5, (32, 32)).astype(np.float32)
+    want = np.min(a[:, :, None] + b[None, :, :], axis=1)
+    got = mp_pallas(a, b, bm=32, bn=32, bk=32, unroll=4, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 32, 64, 128])
+def test_floyd_warshall_matches_scipy(n, rng):
+    import scipy.sparse.csgraph as cs
+
+    d = rng.uniform(1, 10, (n, n)).astype(np.float32)
+    d = np.minimum(d, d.T)
+    np.fill_diagonal(d, 0)
+    # sparsify: drop 60% of edges
+    mask = rng.uniform(size=(n, n)) < 0.6
+    mask = mask | mask.T
+    np.fill_diagonal(mask, False)
+    d[mask] = np.inf
+    want = cs.floyd_warshall(np.where(np.isfinite(d), d, 0))
+    got = fw_pallas(d, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        ref.floyd_warshall_ref(d), want, rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize(
+    "m,n,d,bm,bn,bd",
+    [
+        (16, 16, 8, 16, 16, 8),
+        (48, 64, 20, 16, 16, 10),
+        (64, 64, 784, 32, 32, 392),
+        (128, 96, 32, 64, 32, 32),
+    ],
+)
+def test_pairwise_matches_direct(m, n, d, bm, bn, bd, rng):
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    y = rng.normal(size=(n, d)).astype(np.float32)
+    want = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    got = pd_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_pairwise_dtypes(dtype, rng):
+    x = rng.normal(size=(32, 16)).astype(dtype)
+    y = rng.normal(size=(32, 16)).astype(dtype)
+    want = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    got = ops.pairwise_sq_dists(x, y, mode="ref")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_ops_mode_dispatch(rng):
+    a = rng.uniform(0, 10, (16, 16)).astype(np.float32)
+    b = rng.uniform(0, 10, (16, 16)).astype(np.float32)
+    for mode in ("auto", "ref", "pallas"):
+        out = ops.minplus(a, b, mode=mode)
+        np.testing.assert_allclose(
+            out, np.min(a[:, :, None] + b[None, :, :], axis=1), rtol=1e-6
+        )
+    with pytest.raises(ValueError):
+        ops.minplus(a, b, mode="bogus")

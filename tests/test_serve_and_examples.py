@@ -1,0 +1,30 @@
+"""Serving loop + example-script integration tests."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import generate
+
+
+def test_generate_greedy_deterministic():
+    out1 = generate("smollm-135m", batch=2, prompt_len=8, gen_len=6, seed=3)
+    out2 = generate("smollm-135m", batch=2, prompt_len=8, gen_len=6, seed=3)
+    np.testing.assert_array_equal(out1["generated"], out2["generated"])
+    assert out1["generated"].shape == (2, 6)
+    assert out1["tok_per_s"] > 0
+
+
+def test_generate_moe_arch():
+    out = generate("granite-moe-1b-a400m", batch=2, prompt_len=8, gen_len=4)
+    assert out["generated"].shape == (2, 4)
+
+
+def test_generate_hybrid_arch():
+    out = generate("jamba-v0.1-52b", batch=2, prompt_len=8, gen_len=4)
+    assert out["generated"].shape == (2, 4)
+
+
+def test_quickstart_example_runs():
+    import examples_path_helper  # noqa: F401  (adds examples/ to sys.path)
+    import quickstart
+
+    quickstart.main()
