@@ -92,6 +92,14 @@ def bench_kernels():
     _row("kernel_minplus_512", t, f"{2 * 512**3 / t / 1e9:.1f}_Gop_s")
     t = _timeit(lambda: ops.floyd_warshall(a, mode="ref"))
     _row("kernel_fw_512", t, f"{2 * 512**3 / t / 1e9:.1f}_Gop_s")
+    # fused Phase-3 update vs unfused min(G, minplus(C, R))
+    g = jnp.asarray(rng.uniform(0, 30, (512, 512)), jnp.float32)
+    c = jnp.asarray(rng.uniform(0, 10, (512, 64)), jnp.float32)
+    r = jnp.asarray(rng.uniform(0, 10, (64, 512)), jnp.float32)
+    t = _timeit(lambda: ops.minplus_update(g, c, r, mode="ref"))
+    _row("kernel_minplus_update_512x64", t, "fused")
+    t = _timeit(lambda: jnp.minimum(g, ops.minplus(c, r, mode="ref")))
+    _row("kernel_minplus_unfused_512x64", t, "unfused_baseline")
     x = jnp.asarray(rng.normal(size=(1024, 784)), jnp.float32)
     t = _timeit(lambda: ops.pairwise_sq_dists(x, x, mode="ref"))
     _row("kernel_pairwise_1024x784", t, f"{2 * 1024 * 1024 * 784 / t / 1e9:.1f}_GFLOP_s")
@@ -121,6 +129,33 @@ def bench_spectral():
         _row(f"spectral_d{d}", t, f"iters={int(eig.iterations)}")
 
 
+def bench_pipeline():
+    """Staged ManifoldPipeline end-to-end + streaming serve throughput."""
+    from repro.core.pipeline import ManifoldPipeline, PipelineConfig
+    from repro.core.streaming import StreamingMapper
+    from repro.data import euler_isometric_swiss_roll
+
+    n, n_stream = 512, 128
+    x, _ = euler_isometric_swiss_roll(n + n_stream, seed=0)
+    x_base = jnp.asarray(x[:n])
+    x_new = jnp.asarray(x[n:])
+    pipe = ManifoldPipeline(cfg=PipelineConfig(k=10, d=2, block=128))
+
+    def fit():
+        return pipe.run(x_base)["embedding"]
+
+    t = _timeit(fit, repeats=2)
+    _row(f"pipeline_fit_n{n}", t, f"stages={len(pipe.stages)}")
+
+    art = pipe.run(x_base)
+    mapper = StreamingMapper.from_artifacts(art, k=10, batch=64)
+    t = _timeit(lambda: mapper(x_new), repeats=2)
+    _row(
+        f"pipeline_stream_m{n_stream}", t,
+        f"{n_stream / t / 1e3:.1f}_kpts_s",
+    )
+
+
 def bench_lm_smoke():
     """One smoke train-step timing per architecture family."""
     from repro.configs import get_smoke_config
@@ -146,6 +181,7 @@ def main() -> None:
     bench_scaling()
     bench_blocksize()
     bench_spectral()
+    bench_pipeline()
     bench_lm_smoke()
 
 

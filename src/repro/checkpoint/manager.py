@@ -52,7 +52,20 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save --
 
-    def save(self, step: int, tree: Tree, *, blocking: bool = False) -> str:
+    def save(
+        self,
+        step: int,
+        tree: Tree,
+        *,
+        blocking: bool = False,
+        manifest_extra: dict | None = None,
+    ) -> str:
+        """Snapshot `tree` under `step`.
+
+        manifest_extra: JSON-serializable metadata merged into the manifest
+        (the pipeline engine records its name + completed stage here so a
+        restart can locate the right resume point without a prototype).
+        """
         flat = _flatten(tree)  # synchronous host snapshot
         path = os.path.join(self.directory, f"step_{step:010d}")
 
@@ -66,11 +79,25 @@ class CheckpointManager:
                 "shapes": {k: list(v.shape) for k, v in flat.items()},
                 "dtypes": {k: str(v.dtype) for k, v in flat.items()},
             }
+            if manifest_extra:
+                manifest.update(manifest_extra)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
-            if os.path.exists(path):
-                shutil.rmtree(path)
-            os.replace(tmp, path)
+            # racing writers of the same step: last os.replace wins; retry
+            # once if another thread re-created `path` between rmtree and
+            # replace (both candidates are complete checkpoints).  A second
+            # failure is a real error: clean up the tmp dir and raise
+            # rather than report a checkpoint that does not exist.
+            for attempt in range(2):
+                if os.path.exists(path):
+                    shutil.rmtree(path, ignore_errors=True)
+                try:
+                    os.replace(tmp, path)
+                    break
+                except OSError:
+                    if attempt == 1:
+                        shutil.rmtree(tmp, ignore_errors=True)
+                        raise
             self._gc()
 
         if blocking:
@@ -106,6 +133,20 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: int) -> dict:
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)
+
+    def restore_flat(self, step: int) -> dict[str, np.ndarray]:
+        """Restore a checkpoint as a flat {key: array} dict, prototype-free
+        (shapes/dtypes come from the manifest).  This is the pipeline
+        stage-boundary restore path: artifacts are a flat namespace, so no
+        pytree prototype is required to resume."""
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        return {k: data[k] for k in data.files}
 
     def restore(self, step: int, target: Tree, *, shardings: Tree | None = None):
         """target: pytree prototype (structure + dtypes).  shardings: optional

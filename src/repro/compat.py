@@ -1,0 +1,72 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases.
+
+The seed targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``check_vma=``); CI containers pin older
+releases where those live under ``jax.experimental.shard_map`` /
+``check_rep=`` or do not exist at all.  Every repro module imports the
+symbols from here so the rest of the codebase is written against one
+(modern) spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on every jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` fallback (psum of ones inside shard_map)."""
+    import jax.numpy as jnp
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(jnp.int32(1), axis_name)
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+            )
+        except TypeError:  # pragma: no cover - older make_mesh signature
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """Device-free mesh (shape/axis_names only) across AbstractMesh APIs."""
+    from jax.sharding import AbstractMesh
+
+    shape, axes = tuple(shape), tuple(axes)
+    if AxisType is not None:
+        try:
+            return AbstractMesh(
+                shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+            )
+        except TypeError:  # pragma: no cover
+            pass
+    try:  # jax ~0.4.35-0.4.38: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:  # pragma: no cover - yet another signature
+        return AbstractMesh(shape, axes)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.kernels import ops
 from repro.sharding.logical import folded_axis_index, mesh_axis_size
 
@@ -58,7 +59,8 @@ def apsp_blocked(g: jax.Array, *, block: int = 512, mode: str = "auto"):
         c = jax.lax.dynamic_slice(g, (0, off), (n, block))
         r = ops.minplus(d, r, mode=mode)
         c = ops.minplus(c, d, mode=mode)
-        return jnp.minimum(g, ops.minplus(c, r, mode=mode))
+        # Phase 3 fused: min(G, C (x) R) without the (n, n) intermediate
+        return ops.minplus_update(g, c, r, mode=mode)
 
     return jax.lax.fori_loop(0, q, iteration, g)
 
@@ -130,8 +132,8 @@ def _apsp_shard_body(
         else:
             row = ops.minplus(diag, row, mode=mode)   # (b,b) x (b,nc)
             col = ops.minplus(col, diag, mode=mode)   # (nr,b) x (b,b)
-        # --- Phase 3: rank-b min-plus update of the local tile ---
-        return jnp.minimum(g_loc, ops.minplus(col, row, mode=mode))
+        # --- Phase 3: fused rank-b min-plus update of the local tile ---
+        return ops.minplus_update(g_loc, col, row, mode=mode)
 
     return jax.lax.fori_loop(lo, hi, iteration, g_loc)
 
@@ -167,7 +169,7 @@ def make_apsp_segment(
         split_panels=split_panels,
     )
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(), P()),

@@ -1,4 +1,5 @@
-"""End-to-end Isomap (paper Alg. 1) - local and distributed drivers.
+"""End-to-end Isomap (paper Alg. 1) - drivers composed from the staged
+:class:`~repro.core.pipeline.ManifoldPipeline`.
 
     1. G = KNN(X, k)
     2. A = ALLPAIRSSHORTESTPATHS(G)
@@ -6,10 +7,11 @@
     4. (Q_d, Delta_d) = EIGENDECOMPOSITION(D)
     5. Y = Q_d . Delta_d^{1/2}
 
-Also provides the Landmark-Isomap (de Silva & Tenenbaum) approximate
-baseline the paper positions itself against: m landmark rows of the
-geodesic matrix (Bellman-Ford min-plus relaxation instead of full APSP),
-landmark MDS, then triangulation of the remaining points.
+``isomap`` and ``isomap_distributed`` are the same stage chain over the
+local and mesh backends respectively.  ``landmark_isomap`` (de Silva &
+Tenenbaum; the approximate baseline the paper positions itself against)
+reuses the pipeline's kNN + graph stages and swaps the O(n^3) APSP tail
+for m landmark Bellman-Ford rows + landmark MDS + triangulation.
 """
 from __future__ import annotations
 
@@ -19,10 +21,20 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import apsp as apsp_mod
-from repro.core import centering, graph, knn as knn_mod, spectral
+from repro.core import spectral
+from repro.core.pipeline import (
+    APSPStage,
+    GraphStage,
+    KNNStage,
+    LocalBackend,
+    ManifoldPipeline,
+    MeshBackend,
+    PipelineConfig,
+    isomap_stages,
+)
+from repro.core.postprocess import clamp_disconnected, embedding_from_eig
 
 
 @dataclasses.dataclass
@@ -34,6 +46,12 @@ class IsomapConfig:
     block: int = 512       # logical block size b
     kernel_mode: str = "auto"
 
+    def to_pipeline(self) -> PipelineConfig:
+        return PipelineConfig(
+            k=self.k, d=self.d, max_iter=self.max_iter, tol=self.tol,
+            block=self.block, kernel_mode=self.kernel_mode,
+        )
+
 
 @dataclasses.dataclass
 class IsomapResult:
@@ -43,43 +61,37 @@ class IsomapResult:
     iterations: int
 
 
-def _finalize(q, lam):
-    lam = jnp.maximum(lam, 0.0)
-    return q * jnp.sqrt(lam)[None, :]
-
-
-def _clamp_disconnected(a: jax.Array) -> jax.Array:
-    """Replace +inf geodesics (disconnected components) by 1.1x the graph
-    diameter.  A no-op on connected graphs (the paper's k is chosen for a
-    single component), but keeps the spectral stage finite otherwise."""
-    finite = jnp.isfinite(a)
-    diam = jnp.max(jnp.where(finite, a, 0.0))
-    return jnp.where(finite, a, 1.1 * diam)
-
-
-def isomap(x: jax.Array, cfg: IsomapConfig, *, keep_geodesics: bool = False):
-    """Single-device exact Isomap - the oracle the distributed path must
-    match bit-for-bit in its math."""
-    n = x.shape[0]
-    dists, idx = knn_mod.knn_blocked(
-        x, k=cfg.k, block=min(cfg.block, n), mode=cfg.kernel_mode
-    )
-    g = graph.knn_to_graph(dists, idx, n=n)
-    a = apsp_mod.apsp_blocked(
-        g, block=min(cfg.block, n), mode=cfg.kernel_mode
-    )
-    a = _clamp_disconnected(a)
-    b = centering.double_center(jnp.square(a))
-    eig = spectral.power_iteration(
-        b, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
-    )
-    y = _finalize(eig.eigenvectors, eig.eigenvalues)
+def _result_from_artifacts(art, *, keep_geodesics: bool) -> IsomapResult:
     return IsomapResult(
-        embedding=y,
-        eigenvalues=eig.eigenvalues,
-        geodesics=a if keep_geodesics else None,
-        iterations=int(eig.iterations),
+        embedding=art["embedding"],
+        eigenvalues=art["eigenvalues"],
+        geodesics=art["geodesics"] if keep_geodesics else None,
+        iterations=int(art["iterations"]),
     )
+
+
+def isomap(
+    x: jax.Array,
+    cfg: IsomapConfig,
+    *,
+    keep_geodesics: bool = False,
+    checkpoint=None,
+    resume: bool = False,
+):
+    """Single-device exact Isomap - the oracle the distributed path must
+    match bit-for-bit in its math.
+
+    checkpoint/resume: optional CheckpointManager making every stage
+    boundary a restart point (see ManifoldPipeline).
+    """
+    pipe = ManifoldPipeline(
+        isomap_stages(),
+        backend=LocalBackend(),
+        cfg=cfg.to_pipeline(),
+        checkpoint=checkpoint,
+    )
+    art = pipe.run(x, resume=resume)
+    return _result_from_artifacts(art, keep_geodesics=keep_geodesics)
 
 
 def isomap_distributed(
@@ -91,80 +103,51 @@ def isomap_distributed(
     model_axis: str = "model",
     checkpoint_cb: Callable | None = None,
     segment: int | None = None,
+    checkpoint=None,
+    resume: bool = False,
 ):
     """Distributed exact Isomap over a 2-D mesh.
 
     x: (n, D), sharded P(data_axis, model_axis) (rows over data, features
     over model).  Returns IsomapResult with a replicated (n, d) embedding.
+    checkpoint_cb/segment checkpoint *within* the APSP stage (panel
+    granularity); checkpoint/resume snapshot *between* stages.
     """
-    n = x.shape[0]
-    # 1. kNN: ring over the data axis; features gathered once up front and
-    # the ring walk split over the model axis (EXPERIMENTS.md SPerf cell D)
-    pd = mesh.shape[data_axis]
-    pm = mesh.shape[model_axis]
-    dists, idx = knn_mod.knn_ring(
-        x, k=cfg.k, mesh=mesh, row_axis=data_axis, feat_axis=model_axis,
-        split_axis=model_axis if pd % pm == 0 else None,
-        mode=cfg.kernel_mode,
+    backend = MeshBackend(
+        mesh, data_axis=data_axis, model_axis=model_axis,
+        segment=segment, checkpoint_cb=checkpoint_cb,
     )
-    # 2. neighbourhood graph scattered into the 2-D block layout
-    g_spec = NamedSharding(mesh, P(data_axis, model_axis))
-    g = jax.jit(
-        functools.partial(graph.knn_to_graph, n=n), out_shardings=g_spec
-    )(dists, idx)
-    # 3. APSP (communication-avoiding blocked FW), checkpointable segments
-    a = apsp_mod.apsp_sharded(
-        g, mesh, b=cfg.block, segment=segment, checkpoint_cb=checkpoint_cb,
-        mode=cfg.kernel_mode, data_axis=data_axis, model_axis=model_axis,
+    pipe = ManifoldPipeline(
+        isomap_stages(),
+        backend=backend,
+        cfg=cfg.to_pipeline(),
+        checkpoint=checkpoint,
     )
-    # 4. double centering of A^{o2}
-    b = centering.double_center_sharded(
-        jax.jit(
-            lambda t: jnp.square(_clamp_disconnected(t)),
-            out_shardings=g_spec,
-        )(a),
-        mesh,
-        data_axis=data_axis, model_axis=model_axis,
-    )
-    # 5. simultaneous power iteration
-    eig_fn = spectral.make_power_iteration_sharded(
-        mesh, n=n, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol,
-        data_axis=data_axis, model_axis=model_axis,
-    )
-    eig = eig_fn(b)
-    y = _finalize(eig.eigenvectors, eig.eigenvalues)
-    return IsomapResult(
-        embedding=y,
-        eigenvalues=eig.eigenvalues,
-        geodesics=a,
-        iterations=int(eig.iterations),
-    )
+    art = pipe.run(x, resume=resume)
+    return _result_from_artifacts(art, keep_geodesics=True)
 
 
 # ------------------------------------------------- Landmark Isomap --------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "m", "d", "mode"))
-def landmark_isomap(
-    x: jax.Array, *, k: int, m: int, d: int, mode: str = "auto"
+@functools.partial(jax.jit, static_argnames=("m", "d", "mode", "sweeps"))
+def _landmark_tail(
+    g: jax.Array, *, m: int, d: int, mode: str, sweeps: int = 32
 ):
-    """L-Isomap baseline (paper SV): m landmarks, Bellman-Ford geodesics
-    from landmarks only, landmark MDS + triangulation.  O(m n^2) instead of
-    O(n^3); approximate."""
-    n = x.shape[0]
-    dists, idx = knn_mod.knn_blocked(x, k=k, block=min(512, n), mode=mode)
-    g = graph.knn_to_graph(dists, idx, n=n)
-    # landmarks = first m points (deterministic; callers may permute x)
+    """Landmark geodesics + landmark MDS + triangulation on a built graph.
+
+    landmarks = first m points (deterministic; callers may permute x).
+    Bellman-Ford sweeps: each sweep extends paths by one kNN-graph hop
+    batch; 32 sweeps covers the hop diameters of the benchmark graphs
+    (validated in tests via fixed-point check).
+    """
     dl = g[:m, :]  # (m, n) initial: direct edges from landmarks
 
     def relax(_, dl):
         return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
 
-    # Bellman-Ford sweeps: each sweep extends paths by one kNN-graph hop
-    # batch; 32 sweeps covers the hop diameters of the benchmark graphs
-    # (validated in tests via fixed-point check).
-    dl = jax.lax.fori_loop(0, 32, relax, dl)
-    dl = _clamp_disconnected(dl)
+    dl = jax.lax.fori_loop(0, sweeps, relax, dl)
+    dl = clamp_disconnected(dl)
 
     dl2 = jnp.square(dl)
     # landmark MDS
@@ -174,12 +157,46 @@ def landmark_isomap(
     bm = -0.5 * (dl2[:, :m] - mu_row - mu_col + mu)
     eig = spectral.power_iteration(bm, d=d, max_iter=100, tol=1e-9)
     lam = jnp.maximum(eig.eigenvalues, 1e-12)
-    l_emb = eig.eigenvectors * jnp.sqrt(lam)[None, :]  # (m, d)
+    l_emb = embedding_from_eig(eig.eigenvectors, lam)  # (m, d)
     # triangulation of all points (de Silva & Tenenbaum distance-based)
     pinv = eig.eigenvectors / jnp.sqrt(lam)[None, :]   # (m, d)
     mean_dl2 = jnp.mean(dl2[:, :m], axis=1)            # (m,)
     y = -0.5 * (dl2 - mean_dl2[:, None]).T @ pinv      # (n, d)
     return y, l_emb
+
+
+class LandmarkStage:
+    """Pipeline tail replacing apsp/clamp/center/eigen for L-Isomap."""
+
+    name = "landmark"
+    requires = ("graph",)
+    provides = ("embedding", "landmark_embedding")
+
+    def __init__(self, m: int):
+        self.m = m
+
+    def run(self, ctx, art):
+        y, l_emb = _landmark_tail(
+            art["graph"], m=self.m, d=ctx.cfg.d, mode=ctx.cfg.kernel_mode
+        )
+        return {"embedding": y, "landmark_embedding": l_emb}
+
+
+def landmark_isomap(
+    x: jax.Array, *, k: int, m: int, d: int, mode: str = "auto"
+):
+    """L-Isomap baseline (paper SV): m landmarks, Bellman-Ford geodesics
+    from landmarks only, landmark MDS + triangulation.  O(m n^2) instead of
+    O(n^3); approximate.  Composed from the pipeline's kNN/graph stages +
+    the landmark tail stage."""
+    pipe = ManifoldPipeline(
+        [KNNStage(), GraphStage(), LandmarkStage(m)],
+        backend=LocalBackend(),
+        cfg=PipelineConfig(k=k, d=d, kernel_mode=mode),
+        name="landmark_isomap",
+    )
+    art = pipe.run(jnp.asarray(x))
+    return art["embedding"], art["landmark_embedding"]
 
 
 def apsp_ops_minplus(a, b, mode):

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.kernels import ops
 
 _BIG = jnp.float32(jnp.inf)
@@ -182,7 +183,7 @@ def knn_ring(
         return best_d, best_i
 
     in_spec = P(row_axis, feat_axis) if feat_axis else P(row_axis, None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=in_spec,

@@ -2,16 +2,16 @@
 
 The paper's conclusion claims its components extend to other non-linear
 spectral methods "with minimal effort ... like e.g. LLE" - this module is
-that demonstration: LLE reuses the blocked kNN solver and the simultaneous
-power iteration verbatim; only the feature matrix changes (local
-reconstruction weights instead of geodesics).
+that demonstration: LLE is registered as a pair of tail stages behind the
+pipeline's shared kNN stage (see :func:`repro.core.pipeline.lle_stages`);
+only the feature matrix changes (local reconstruction weights instead of
+geodesics).
 
-    1. kNN (shared with Isomap)
+    1. kNN (shared pipeline stage)
     2. W: per-point local Gram solve  G w = 1,  w /= sum(w)
     3. M = (I - W)^T (I - W)
-    4. bottom d+1 eigenvectors of M via power iteration on (sigma*I - M)
-       (spectral shift turns smallest-eigenpair extraction into the same
-       Alg. 2 largest-eigenpair iteration the paper implements)
+    4. bottom d+1 eigenvectors of M via simultaneous inverse iteration
+       (the same Alg. 2 loop with the matvec replaced by a solve)
 """
 from __future__ import annotations
 
@@ -20,18 +20,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import knn as knn_mod, spectral
 
+@functools.partial(jax.jit, static_argnames=("reg",))
+def lle_embedding_matrix(
+    x: jax.Array, idx: jax.Array, *, reg: float = 1e-3
+) -> jax.Array:
+    """kNN indices (n, k) -> dense LLE feature matrix M = (I-W)^T (I-W).
 
-@functools.partial(jax.jit, static_argnames=("k", "d", "reg"))
-def lle(x: jax.Array, *, k: int = 10, d: int = 2, reg: float = 1e-3):
-    """x: (n, D) -> (n, d) embedding.  Dense-M formulation (laptop scale;
-    the distributed variant tiles M exactly like the Isomap feature
-    matrix)."""
+    Local reconstruction weights: for each i solve (C + reg*tr(C)I) w = 1.
+    """
     n, _ = x.shape
-    dists, idx = knn_mod.knn_blocked(x, k=k, block=min(512, n))
-
-    # local reconstruction weights: for each i solve (C + reg*tr(C)I) w = 1
+    k = idx.shape[1]
     neigh = x[idx]                                  # (n, k, D)
     z = neigh - x[:, None, :]                       # centered neighbours
     c = jnp.einsum("nkd,nld->nkl", z, z)            # (n, k, k) Gram
@@ -45,18 +44,25 @@ def lle(x: jax.Array, *, k: int = 10, d: int = 2, reg: float = 1e-3):
         jnp.repeat(jnp.arange(n), k), idx.reshape(-1)
     ].add(w.reshape(-1))
     iw = jnp.eye(n) - wmat
-    m = iw.T @ iw
+    return iw.T @ iw
 
-    # smallest eigenpairs: LLE's bottom spectrum is extremely clustered
-    # (gaps ~1e-7 vs ||M|| ~ 10), so a spectral-shift power iteration
-    # cannot resolve it; use simultaneous INVERSE iteration - the same
-    # Alg. 2 loop with the matvec replaced by a solve.  Dense Cholesky
-    # here (laptop scale); the distributed variant runs CG on the same
-    # 2-D block layout as the Isomap mat-vec.  NOTE: in f32 the bottom
-    # eigen-gaps (~1e-9) sit at the numerical noise floor, so embedding
-    # quality trails an f64 oracle - an inherent precision property of
-    # LLE, not of the distribution scheme (Isomap's top spectrum has no
-    # such issue, which is one reason the paper centres on Isomap).
+
+@functools.partial(jax.jit, static_argnames=("d", "iters"))
+def lle_bottom_eigen(m: jax.Array, *, d: int = 2, iters: int = 50):
+    """Bottom-spectrum embedding of the LLE matrix M.
+
+    LLE's bottom spectrum is extremely clustered (gaps ~1e-7 vs ||M|| ~
+    10), so a spectral-shift power iteration cannot resolve it; use
+    simultaneous INVERSE iteration - the same Alg. 2 loop with the matvec
+    replaced by a solve.  Dense Cholesky here (laptop scale); the
+    distributed variant runs CG on the same 2-D block layout as the Isomap
+    mat-vec.  NOTE: in f32 the bottom eigen-gaps (~1e-9) sit at the
+    numerical noise floor, so embedding quality trails an f64 oracle - an
+    inherent precision property of LLE, not of the distribution scheme
+    (Isomap's top spectrum has no such issue, which is one reason the
+    paper centres on Isomap).
+    """
+    n = m.shape[0]
     eps = 1e-9 * jnp.trace(m) / n
     cho = jax.scipy.linalg.cho_factor(m + eps * jnp.eye(n))
 
@@ -66,8 +72,23 @@ def lle(x: jax.Array, *, k: int = 10, d: int = 2, reg: float = 1e-3):
         return q_new
 
     q0, _ = jnp.linalg.qr(jnp.eye(n, d + 1))
-    q = jax.lax.fori_loop(0, 50, body, q0)
+    q = jax.lax.fori_loop(0, iters, body, q0)
     lam = jnp.diag(q.T @ (m @ q))                    # Rayleigh quotients
     order = jnp.argsort(lam)
     vecs = q[:, order][:, 1 : d + 1]                 # drop constant vector
     return vecs * jnp.sqrt(jnp.asarray(n, vecs.dtype))
+
+
+def lle(x: jax.Array, *, k: int = 10, d: int = 2, reg: float = 1e-3):
+    """x: (n, D) -> (n, d) embedding, composed from the staged pipeline
+    (shared kNN stage + the two LLE tail stages)."""
+    from repro.core.pipeline import (
+        ManifoldPipeline, PipelineConfig, lle_stages,
+    )
+
+    pipe = ManifoldPipeline(
+        lle_stages(),
+        cfg=PipelineConfig(k=k, d=d, lle_reg=reg),
+        name="lle",
+    )
+    return pipe.run(jnp.asarray(x))["embedding"]

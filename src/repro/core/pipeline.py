@@ -1,0 +1,458 @@
+"""Staged execution engine for manifold-learning pipelines.
+
+Every driver in this repo (local/distributed exact Isomap, Landmark
+Isomap, LLE, the streaming new-point mapper) is a composition of the same
+stage chain the paper formalizes as Alg. 1; this module makes that chain a
+first-class object.  Stage -> paper mapping:
+
+  ==========  =====================================================
+  stage name  paper Alg. 1 step
+  ==========  =====================================================
+  ``knn``     step 1, G = KNN(X, k): exact k-nearest neighbours
+  ``graph``   step 1, G assembly: kNN lists -> dense (n, n) graph
+  ``apsp``    step 2, A = AllPairsShortestPaths(G) (blocked FW)
+  ``clamp``   guard between steps 2/3: finite-ize +inf geodesics
+  ``center``  step 3, B = DoubleCenter(A^{o2})
+  ``eigen``   steps 4-5, (Q_d, Delta_d) and Y = Q_d Delta_d^{1/2}
+  ==========  =====================================================
+
+Architecture
+------------
+A :class:`Stage` consumes and produces named **artifacts** (a flat
+``{name: array}`` namespace).  :class:`ManifoldPipeline` executes a stage
+list over a :class:`LocalBackend` or :class:`MeshBackend` - single-device
+and mesh-sharded execution are two backends of ONE pipeline rather than
+parallel hand-wired codepaths.  Each stage boundary is a checkpoint/resume
+point (``checkpoint=CheckpointManager(...)``, ``resume=True``): the
+artifacts produced so far are persisted with the stage name in the
+manifest, and a restarted pipeline skips every completed stage.  Persisted
+artifacts are also reusable state in their own right - the streaming
+mapper (:class:`repro.core.streaming.StreamingMapper`) serves new-point
+queries straight from a fitted pipeline's ``geodesics`` + ``embedding``
+artifacts (Schoeneman et al.'s stream/batch combination point).
+
+LLE registers its own tail stages (``lle_weights``, ``lle_eigen``) behind
+the shared ``knn`` stage - the paper's "extends to other spectral methods
+with minimal effort" claim, now expressed as stage substitution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apsp as apsp_mod
+from repro.core import centering, graph, knn as knn_mod, spectral
+from repro.core.postprocess import clamp_disconnected, embedding_from_eig
+
+Artifacts = dict[str, Any]
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    """Stage hyperparameters (mirrors the paper's Alg. 1 knobs)."""
+
+    k: int = 10            # neighbourhood size (paper uses 10 throughout)
+    d: int = 2             # target dimension
+    max_iter: int = 100    # power-iteration cap (paper l=100)
+    tol: float = 1e-9      # convergence threshold (paper t=1e-9)
+    block: int = 512       # logical block size b
+    kernel_mode: str = "auto"
+    lle_reg: float = 1e-3  # LLE local-Gram regularizer
+
+
+# ------------------------------------------------------------ backends ----
+
+
+class LocalBackend:
+    """Single-device execution of the primitive stage ops."""
+
+    kind = "local"
+
+    def knn(self, cfg: PipelineConfig, x):
+        n = x.shape[0]
+        return knn_mod.knn_blocked(
+            x, k=cfg.k, block=min(cfg.block, n), mode=cfg.kernel_mode
+        )
+
+    def graph(self, cfg: PipelineConfig, dists, idx, n: int):
+        return graph.knn_to_graph(dists, idx, n=n)
+
+    def apsp(self, cfg: PipelineConfig, g):
+        n = g.shape[0]
+        return apsp_mod.apsp_blocked(
+            g, block=min(cfg.block, n), mode=cfg.kernel_mode
+        )
+
+    def clamp(self, cfg: PipelineConfig, a):
+        return jax.jit(clamp_disconnected)(a)
+
+    def center(self, cfg: PipelineConfig, a):
+        return centering.double_center(jnp.square(a))
+
+    def eigen(self, cfg: PipelineConfig, b):
+        return spectral.power_iteration(
+            b, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
+        )
+
+
+class MeshBackend:
+    """Mesh-sharded execution: same stage chain, explicit collectives.
+
+    checkpoint_cb/segment feed the *intra-stage* APSP panel checkpoints
+    (the paper's every-K-iterations lineage checkpoint); the *inter-stage*
+    resume points are owned by :class:`ManifoldPipeline`.
+    """
+
+    kind = "sharded"
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        data_axis: str = "data",
+        model_axis: str = "model",
+        segment: int | None = None,
+        checkpoint_cb: Callable | None = None,
+    ):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.segment = segment
+        self.checkpoint_cb = checkpoint_cb
+        self.tile_spec = NamedSharding(mesh, P(data_axis, model_axis))
+
+    def knn(self, cfg: PipelineConfig, x):
+        pd = self.mesh.shape[self.data_axis]
+        pm = self.mesh.shape[self.model_axis]
+        return knn_mod.knn_ring(
+            x, k=cfg.k, mesh=self.mesh,
+            row_axis=self.data_axis, feat_axis=self.model_axis,
+            split_axis=self.model_axis if pd % pm == 0 else None,
+            mode=cfg.kernel_mode,
+        )
+
+    def graph(self, cfg: PipelineConfig, dists, idx, n: int):
+        return jax.jit(
+            functools.partial(graph.knn_to_graph, n=n),
+            out_shardings=self.tile_spec,
+        )(dists, idx)
+
+    def apsp(self, cfg: PipelineConfig, g):
+        return apsp_mod.apsp_sharded(
+            g, self.mesh, b=cfg.block, segment=self.segment,
+            checkpoint_cb=self.checkpoint_cb, mode=cfg.kernel_mode,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+
+    def clamp(self, cfg: PipelineConfig, a):
+        return jax.jit(clamp_disconnected, out_shardings=self.tile_spec)(a)
+
+    def center(self, cfg: PipelineConfig, a):
+        sq = jax.jit(jnp.square, out_shardings=self.tile_spec)(a)
+        return centering.double_center_sharded(
+            sq, self.mesh,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+
+    def eigen(self, cfg: PipelineConfig, b):
+        n = b.shape[0]
+        eig_fn = spectral.make_power_iteration_sharded(
+            self.mesh, n=n, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+        return eig_fn(b)
+
+
+# -------------------------------------------------------------- stages ----
+
+
+@runtime_checkable
+class Stage(Protocol):
+    """One named unit of the pipeline: consumes `requires` artifacts,
+    produces `provides` artifacts.  Implementations dispatch through the
+    context's backend so the same stage object runs locally or sharded."""
+
+    name: str
+    requires: tuple[str, ...]
+    provides: tuple[str, ...]
+
+    def run(self, ctx: "PipelineContext", art: Artifacts) -> Artifacts: ...
+
+
+@dataclasses.dataclass
+class PipelineContext:
+    cfg: PipelineConfig
+    backend: LocalBackend | MeshBackend
+
+
+class KNNStage:
+    name = "knn"
+    requires = ("x",)
+    provides = ("knn_dists", "knn_idx")
+
+    def run(self, ctx, art):
+        d, i = ctx.backend.knn(ctx.cfg, art["x"])
+        return {"knn_dists": d, "knn_idx": i}
+
+
+class GraphStage:
+    name = "graph"
+    requires = ("x", "knn_dists", "knn_idx")
+    provides = ("graph",)
+
+    def run(self, ctx, art):
+        g = ctx.backend.graph(
+            ctx.cfg, art["knn_dists"], art["knn_idx"], n=art["x"].shape[0]
+        )
+        return {"graph": g}
+
+
+class APSPStage:
+    name = "apsp"
+    requires = ("graph",)
+    provides = ("geodesics_raw",)
+
+    def run(self, ctx, art):
+        return {"geodesics_raw": ctx.backend.apsp(ctx.cfg, art["graph"])}
+
+
+class ClampStage:
+    name = "clamp"
+    requires = ("geodesics_raw",)
+    provides = ("geodesics",)
+
+    def run(self, ctx, art):
+        return {"geodesics": ctx.backend.clamp(ctx.cfg, art["geodesics_raw"])}
+
+
+class CenterStage:
+    name = "center"
+    requires = ("geodesics",)
+    provides = ("gram",)
+
+    def run(self, ctx, art):
+        return {"gram": ctx.backend.center(ctx.cfg, art["geodesics"])}
+
+
+class EigenStage:
+    name = "eigen"
+    requires = ("gram",)
+    provides = (
+        "eigenvectors", "eigenvalues", "iterations", "delta", "embedding",
+    )
+
+    def run(self, ctx, art):
+        eig = ctx.backend.eigen(ctx.cfg, art["gram"])
+        y = embedding_from_eig(eig.eigenvectors, eig.eigenvalues)
+        return {
+            "eigenvectors": eig.eigenvectors,
+            "eigenvalues": eig.eigenvalues,
+            "iterations": eig.iterations,
+            "delta": eig.delta,
+            "embedding": y,
+        }
+
+
+# LLE tail stages (registered behind the shared KNN stage) ------------------
+
+
+class LLEWeightsStage:
+    """Local reconstruction weights + dense M = (I-W)^T (I-W)."""
+
+    name = "lle_weights"
+    requires = ("x", "knn_dists", "knn_idx")
+    provides = ("lle_m",)
+
+    def run(self, ctx, art):
+        from repro.core.lle import lle_embedding_matrix
+
+        m = lle_embedding_matrix(
+            art["x"], art["knn_idx"], reg=ctx.cfg.lle_reg
+        )
+        return {"lle_m": m}
+
+
+class LLEEigenStage:
+    """Bottom-spectrum extraction by simultaneous inverse iteration."""
+
+    name = "lle_eigen"
+    requires = ("lle_m",)
+    provides = ("embedding",)
+
+    def run(self, ctx, art):
+        from repro.core.lle import lle_bottom_eigen
+
+        return {"embedding": lle_bottom_eigen(art["lle_m"], d=ctx.cfg.d)}
+
+
+def isomap_stages() -> list[Stage]:
+    """The Alg. 1 chain."""
+    return [
+        KNNStage(), GraphStage(), APSPStage(),
+        ClampStage(), CenterStage(), EigenStage(),
+    ]
+
+
+def lle_stages() -> list[Stage]:
+    """LLE = shared kNN front + LLE-specific tail."""
+    return [KNNStage(), LLEWeightsStage(), LLEEigenStage()]
+
+
+# ------------------------------------------------------------ pipeline ----
+
+
+class ManifoldPipeline:
+    """Executes a stage list over one backend, checkpointing at stage
+    boundaries.
+
+    checkpoint: optional :class:`repro.checkpoint.CheckpointManager`.
+    After stage i completes, the full artifact namespace is saved at step
+    i+1 with ``{"pipeline": name, "stage": stage.name}`` in the manifest;
+    ``run(..., resume=True)`` restores the newest compatible checkpoint
+    and re-executes only the remaining stages.
+    checkpoint_artifacts: restrict which artifacts are persisted (e.g.
+    drop the O(n^2) ``graph`` once ``geodesics`` exist); None saves all.
+    """
+
+    def __init__(
+        self,
+        stages: Sequence[Stage] | None = None,
+        *,
+        backend: LocalBackend | MeshBackend | None = None,
+        cfg: PipelineConfig | None = None,
+        checkpoint=None,
+        checkpoint_artifacts: Sequence[str] | None = None,
+        name: str = "isomap",
+    ):
+        self.stages = list(stages) if stages is not None else isomap_stages()
+        self.ctx = PipelineContext(
+            cfg=cfg or PipelineConfig(), backend=backend or LocalBackend()
+        )
+        self.checkpoint = checkpoint
+        self.checkpoint_artifacts = (
+            tuple(checkpoint_artifacts)
+            if checkpoint_artifacts is not None
+            else None
+        )
+        self.name = name
+        self._validate()
+
+    @property
+    def cfg(self) -> PipelineConfig:
+        return self.ctx.cfg
+
+    @property
+    def backend(self):
+        return self.ctx.backend
+
+    def _validate(self):
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names: {names}")
+        available = {"x"}
+        for s in self.stages:
+            missing = set(s.requires) - available
+            if missing:
+                raise ValueError(
+                    f"stage {s.name!r} requires {sorted(missing)} but only "
+                    f"{sorted(available)} are produced upstream"
+                )
+            available.update(s.provides)
+
+    # ----------------------------------------------------------- resume --
+
+    def _cfg_fingerprint(self) -> dict:
+        """JSON-round-tripped config dict, comparable against manifests."""
+        import json
+
+        return json.loads(json.dumps(dataclasses.asdict(self.ctx.cfg)))
+
+    def _find_resume_point(self) -> tuple[int, Artifacts | None]:
+        """-> (first stage index to run, restored artifacts or None).
+
+        A checkpoint is only a valid resume point if (a) it was written by
+        a pipeline with this name AND the same config (a k=10 geodesic
+        matrix must not silently answer a k=15 run), and (b) its saved
+        artifacts satisfy the `requires` chain of every remaining stage
+        (checkpoint_artifacts filtering may have dropped some) - otherwise
+        the scan falls back to an older boundary.
+        """
+        names = [s.name for s in self.stages]
+        cfg_fp = self._cfg_fingerprint()
+        for step in reversed(self.checkpoint.all_steps()):
+            try:
+                manifest = self.checkpoint.read_manifest(step)
+            except OSError:
+                continue
+            if manifest.get("pipeline") != self.name:
+                continue
+            stage = manifest.get("stage")
+            if stage not in names:
+                continue
+            saved_cfg = manifest.get("config")
+            if saved_cfg is not None and saved_cfg != cfg_fp:
+                continue
+            start = names.index(stage) + 1
+            available = set(manifest.get("keys", [])) | {"x"}
+            satisfiable = True
+            for s in self.stages[start:]:
+                if not set(s.requires) <= available:
+                    satisfiable = False
+                    break
+                available |= set(s.provides)
+            if not satisfiable:
+                continue
+            art = {
+                k: jnp.asarray(v)
+                for k, v in self.checkpoint.restore_flat(step).items()
+            }
+            return start, art
+        return 0, None
+
+    # -------------------------------------------------------------- run --
+
+    def run(self, x, *, resume: bool = False) -> Artifacts:
+        """Execute the pipeline on input points x (n, D) -> artifacts."""
+        art: Artifacts = {"x": x}
+        start = 0
+        if resume and self.checkpoint is not None:
+            start, restored = self._find_resume_point()
+            if restored is not None:
+                x_saved = restored.get("x")
+                if x_saved is not None and x_saved.shape != x.shape:
+                    raise ValueError(
+                        f"resume: checkpointed input has shape "
+                        f"{x_saved.shape} but run() was given {x.shape}; "
+                        "pass the original points, a fresh checkpoint "
+                        "directory, or resume=False"
+                    )
+                restored.setdefault("x", x)
+                art = restored
+        for i in range(start, len(self.stages)):
+            stage = self.stages[i]
+            art.update(stage.run(self.ctx, art))
+            if self.checkpoint is not None:
+                save = art
+                if self.checkpoint_artifacts is not None:
+                    save = {
+                        k: v for k, v in art.items()
+                        if k in self.checkpoint_artifacts or k == "x"
+                    }
+                self.checkpoint.save(
+                    i + 1,
+                    save,
+                    manifest_extra={
+                        "pipeline": self.name,
+                        "stage": stage.name,
+                        "config": self._cfg_fingerprint(),
+                    },
+                )
+        if self.checkpoint is not None:
+            self.checkpoint.wait()
+        return art

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 class EigResult(NamedTuple):
     eigenvectors: jax.Array   # (n, d)
@@ -125,7 +127,7 @@ def make_power_iteration_sharded(
         order = jnp.argsort(-jnp.abs(lam))
         return EigResult(q[:, order], lam[order], it, delta)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=P(data_axis, model_axis),

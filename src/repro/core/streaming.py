@@ -2,12 +2,15 @@
 "orthogonal to the one we present here, and in fact both methods could be
 combined in case when the initial batch is large").
 
-This module is that combination point: an exact Isomap run over the large
-initial batch (this framework) produces (X_base, geodesics A, embedding Y);
-``map_new_points`` then places stream arrivals on the learned manifold in
-O(k n) per point - kNN against the base set, one min-plus relaxation
-through the base geodesics, and the L-Isomap triangulation against the
-embedding's eigenbasis.
+This module is that combination point: an exact Isomap pipeline run over
+the large initial batch produces the ``x`` / ``geodesics`` / ``embedding``
+artifacts; :func:`map_new_points` places stream arrivals on the learned
+manifold in O(k n) per point - kNN against the base set, one min-plus
+relaxation through the base geodesics, and the L-Isomap triangulation
+against the embedding's eigenbasis.  :class:`StreamingMapper` packages
+that as a serving object constructed straight from pipeline artifacts
+(in-memory or restored from a stage-boundary checkpoint) and maps arrival
+batches with bounded peak memory.
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
@@ -44,3 +48,84 @@ def map_new_points(
     mean_sq = jnp.mean(jnp.square(a_base), axis=1)       # (n,)
     y_new = -0.5 * (jnp.square(geo) - mean_sq[None, :]) @ pinv
     return y_new
+
+
+class StreamingMapper:
+    """Serves new-point queries from a fitted pipeline's artifacts.
+
+    The pipeline's ``x`` (base points), ``geodesics`` and ``embedding``
+    artifacts are exactly the state this mapper needs - they are reusable
+    across restarts via the pipeline's stage-boundary checkpoints:
+
+        pipe = ManifoldPipeline(checkpoint=mgr)
+        art  = pipe.run(x_base)
+        mapper = StreamingMapper.from_artifacts(art, k=10)
+        ...crash...
+        mapper = StreamingMapper.from_checkpoint(mgr, k=10)  # no refit
+
+    Queries are mapped in `batch` chunks so peak memory stays at
+    O(batch * n) regardless of arrival-burst size.
+    """
+
+    def __init__(
+        self,
+        x_base: jax.Array,
+        geodesics: jax.Array,
+        embedding: jax.Array,
+        *,
+        k: int = 10,
+        batch: int = 256,
+    ):
+        n = x_base.shape[0]
+        assert geodesics.shape == (n, n), (geodesics.shape, n)
+        assert embedding.shape[0] == n, (embedding.shape, n)
+        self.x_base = jnp.asarray(x_base)
+        self.geodesics = jnp.asarray(geodesics)
+        self.embedding = jnp.asarray(embedding)
+        self.k = k
+        self.batch = batch
+
+    @classmethod
+    def from_artifacts(cls, artifacts: dict, *, k: int = 10, batch: int = 256):
+        """Build from a ManifoldPipeline.run() artifact namespace."""
+        return cls(
+            artifacts["x"], artifacts["geodesics"], artifacts["embedding"],
+            k=k, batch=batch,
+        )
+
+    @classmethod
+    def from_checkpoint(cls, manager, *, k: int = 10, batch: int = 256):
+        """Restore the newest pipeline checkpoint holding the needed
+        artifacts (i.e. any stage boundary at or after ``eigen``)."""
+        for step in reversed(manager.all_steps()):
+            manifest = manager.read_manifest(step)
+            if {"x", "geodesics", "embedding"} <= set(manifest["keys"]):
+                return cls.from_artifacts(
+                    manager.restore_flat(step), k=k, batch=batch
+                )
+        raise FileNotFoundError(
+            f"no checkpoint in {manager.directory} holds the "
+            "x/geodesics/embedding artifacts (pipeline not run to eigen?)"
+        )
+
+    def __call__(self, x_new: jax.Array) -> jax.Array:
+        """Map (m, D) arrivals -> (m, d) manifold coordinates, batched."""
+        x_new = jnp.asarray(x_new)
+        m = x_new.shape[0]
+        if m <= self.batch:
+            return map_new_points(
+                x_new, self.x_base, self.geodesics, self.embedding, k=self.k
+            )
+        outs = []
+        for lo in range(0, m, self.batch):
+            outs.append(
+                map_new_points(
+                    x_new[lo : lo + self.batch],
+                    self.x_base, self.geodesics, self.embedding, k=self.k,
+                )
+            )
+        return jnp.concatenate(outs, axis=0)
+
+    def map_stream(self, batches) -> np.ndarray:
+        """Consume an iterable of arrival batches; returns stacked coords."""
+        return np.concatenate([np.asarray(self(b)) for b in batches], axis=0)

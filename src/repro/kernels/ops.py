@@ -17,6 +17,7 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.floyd_warshall import floyd_warshall as _fw_pallas
 from repro.kernels.minplus import minplus as _mp_pallas
+from repro.kernels.minplus_update import minplus_update as _mpu_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
 
 
@@ -40,6 +41,15 @@ def minplus(a, b, *, mode: str = "auto", **tile_kw):
     if use_pallas:
         return _mp_pallas(a, b, interpret=interpret, **tile_kw)
     return _ref.minplus_ref(a, b)
+
+
+def minplus_update(g, c, r, *, mode: str = "auto", **tile_kw):
+    """Fused Phase-3 relaxation: min(g, c (x) r) without the (m, n)
+    min-plus intermediate."""
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _mpu_pallas(g, c, r, interpret=interpret, **tile_kw)
+    return _ref.minplus_update_ref(g, c, r)
 
 
 def floyd_warshall(d, *, mode: str = "auto"):

@@ -41,6 +41,37 @@ def minplus_ref(a: jax.Array, b: jax.Array, *, chunk: int = 256) -> jax.Array:
     return jax.lax.fori_loop(0, steps, body, init)
 
 
+def minplus_update_ref(
+    g: jax.Array, c: jax.Array, r: jax.Array, *, chunk: int = 256
+) -> jax.Array:
+    """Fused min-plus update: O[i,j] = min(G[i,j], min_k C[i,k] + R[k,j]).
+
+    Identical accumulation order to :func:`minplus_ref` but seeded from G,
+    so ``minplus_update_ref(g, c, r) == minimum(g, minplus_ref(c, r))``
+    bit-for-bit (min is exact) while the (m, n) product intermediate is
+    never formed outside the fused loop.
+    """
+    m, n = g.shape
+    m2, k = c.shape
+    k2, n2 = r.shape
+    assert (m, n) == (m2, n2) and k == k2, (g.shape, c.shape, r.shape)
+    chunk = min(chunk, k)
+    if k % chunk:
+        pad = chunk - k % chunk
+        c = jnp.pad(c, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        r = jnp.pad(r, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        k += pad
+    steps = k // chunk
+
+    def body(s, acc):
+        ck = jax.lax.dynamic_slice(c, (0, s * chunk), (m, chunk))
+        rk = jax.lax.dynamic_slice(r, (s * chunk, 0), (chunk, n))
+        part = jnp.min(ck[:, :, None] + rk[None, :, :], axis=1)
+        return jnp.minimum(acc, part)
+
+    return jax.lax.fori_loop(0, steps, body, g)
+
+
 def floyd_warshall_ref(d: jax.Array) -> jax.Array:
     """In-block Floyd-Warshall: all-pairs shortest paths on a dense block.
 

@@ -3,11 +3,14 @@
 A function (not a module-level constant) so importing this module never
 touches jax device state - the dry-run sets XLA_FLAGS before any jax
 initialization and only then calls make_production_mesh().
+
+Mesh construction is routed through :mod:`repro.compat` so the
+``AxisType.Auto`` annotation is applied on jax releases that support it
+and silently dropped on those that predate it.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,13 +19,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     (ICI-local within a pod)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / laptop runs."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)

@@ -1,8 +1,13 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: LM generation loop + manifold streaming service.
 
 ``python -m repro.launch.serve --arch smollm-135m --smoke`` runs a real
 batched generation on CPU; the same prefill/decode step functions are what
 the dry-run lowers for the prefill_32k / decode_32k / long_500k shapes.
+
+``python -m repro.launch.serve --manifold swissroll`` drives the staged
+ManifoldPipeline instead: fit exact Isomap on a base batch (stage-boundary
+checkpointed), then serve streamed new-point batches from the persisted
+geodesic + eigenbasis artifacts via StreamingMapper.
 """
 from __future__ import annotations
 
@@ -89,6 +94,65 @@ def generate(
     }
 
 
+def serve_manifold(
+    *,
+    n_base: int = 512,
+    n_stream: int = 256,
+    stream_batch: int = 64,
+    k: int = 10,
+    d: int = 2,
+    block: int = 128,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    seed: int = 0,
+):
+    """Fit the staged Isomap pipeline on a base batch, then serve streamed
+    arrivals from its persisted artifacts.  Returns timing + quality."""
+    from repro.core import metrics
+    from repro.core.pipeline import ManifoldPipeline, PipelineConfig
+    from repro.core.streaming import StreamingMapper
+    from repro.data import euler_isometric_swiss_roll
+
+    x, latent = euler_isometric_swiss_roll(n_base + n_stream, seed=seed)
+    x_base, x_stream = jnp.asarray(x[:n_base]), jnp.asarray(x[n_base:])
+
+    checkpoint = None
+    if checkpoint_dir:
+        from repro.checkpoint import CheckpointManager
+
+        checkpoint = CheckpointManager(checkpoint_dir)
+
+    pipe = ManifoldPipeline(
+        cfg=PipelineConfig(k=k, d=d, block=block), checkpoint=checkpoint
+    )
+    t0 = time.time()
+    art = pipe.run(x_base, resume=resume)
+    jax.block_until_ready(art["embedding"])
+    t_fit = time.time() - t0
+
+    mapper = StreamingMapper.from_artifacts(art, k=k, batch=stream_batch)
+    t0 = time.time()
+    batches = [
+        x_stream[lo : lo + stream_batch]
+        for lo in range(0, n_stream, stream_batch)
+    ]
+    y_stream = mapper.map_stream(batches)
+    t_serve = time.time() - t0
+
+    full = np.concatenate([np.asarray(art["embedding"]), y_stream])
+    err = float(
+        metrics.procrustes_error(jnp.asarray(full), jnp.asarray(latent))
+    )
+    return {
+        "fit_s": t_fit,
+        "serve_s": t_serve,
+        "points_per_s": n_stream / max(t_serve, 1e-9),
+        "procrustes_error": err,
+        "n_base": n_base,
+        "n_stream": n_stream,
+    }
+
+
 def _sample(logits, key, temperature):
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -97,13 +161,47 @@ def _sample(logits, key, temperature):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--arch", choices=configs.ARCHS)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--manifold", choices=("swissroll",),
+        help="serve the manifold pipeline instead of an LM arch",
+    )
+    ap.add_argument("--n-base", type=int, default=512)
+    ap.add_argument("--n-stream", type=int, default=256)
+    ap.add_argument("--stream-batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
+    if args.manifold:
+        out = serve_manifold(
+            n_base=args.n_base,
+            n_stream=args.n_stream,
+            stream_batch=args.stream_batch,
+            k=args.k,
+            d=args.d,
+            block=args.block,
+            seed=args.seed,
+            checkpoint_dir=args.checkpoint_dir,
+            resume=args.resume,
+        )
+        print(
+            f"[serve manifold] fit={out['fit_s']:.2f}s "
+            f"serve={out['serve_s']:.3f}s "
+            f"({out['points_per_s']:.0f} pts/s) "
+            f"err={out['procrustes_error']:.2e}"
+        )
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --manifold is given")
     out = generate(
         args.arch,
         batch=args.batch,

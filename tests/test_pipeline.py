@@ -1,0 +1,391 @@
+"""ManifoldPipeline engine tests: fused min-plus-update kernel oracles,
+stage-graph execution/validation, stage-boundary checkpoint resume, and
+streaming new-point mapping vs a full-batch Isomap oracle."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core import apsp, graph, isomap, knn, metrics, streaming
+from repro.core.pipeline import (
+    GraphStage,
+    KNNStage,
+    LocalBackend,
+    ManifoldPipeline,
+    PipelineConfig,
+    isomap_stages,
+    lle_stages,
+)
+from repro.core.postprocess import clamp_disconnected, embedding_from_eig
+from repro.data import euler_isometric_swiss_roll
+from repro.kernels import ops, ref
+from repro.kernels.minplus_update import minplus_update as mpu_pallas
+
+
+# ------------------------------------------------ fused min-plus update ---
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 8, 8), (32, 32, 32), (64, 32, 96), (128, 64, 128)]
+)
+def test_minplus_update_ref_bit_identical_to_unfused(m, k, n, rng):
+    g = rng.uniform(0, 30, (m, n)).astype(np.float32)
+    c = rng.uniform(0, 10, (m, k)).astype(np.float32)
+    r = rng.uniform(0, 10, (k, n)).astype(np.float32)
+    c[c < 2.0] = np.inf  # exercise the +inf (no-edge) path
+    fused = np.asarray(ops.minplus_update(g, c, r, mode="ref"))
+    unfused = np.minimum(g, np.asarray(ops.minplus(c, r, mode="ref")))
+    # min is exact in fp: the fused accumulation must be bit-identical
+    np.testing.assert_array_equal(fused, unfused)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk,unroll",
+    [
+        (32, 32, 32, 32, 32, 32, 4),
+        (64, 64, 64, 32, 32, 32, 8),
+        (128, 64, 96, 64, 32, 64, 8),
+        (8, 8, 8, 8, 8, 8, 1),
+    ],
+)
+def test_minplus_update_pallas_matches_oracle(m, k, n, bm, bn, bk, unroll, rng):
+    g = rng.uniform(0, 30, (m, n)).astype(np.float32)
+    c = rng.uniform(0, 10, (m, k)).astype(np.float32)
+    r = rng.uniform(0, 10, (k, n)).astype(np.float32)
+    want = np.minimum(g, np.min(c[:, :, None] + r[None, :, :], axis=1))
+    got = mpu_pallas(
+        g, c, r, bm=bm, bn=bn, bk=bk, unroll=unroll, interpret=True
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    np.testing.assert_array_equal(ref.minplus_update_ref(g, c, r), want)
+
+
+def test_apsp_fused_geodesics_bit_identical_to_unfused(rng):
+    """apsp_blocked (fused Phase 3) vs a hand-unfused reimplementation:
+    geodesics must be bit-identical in mode='ref'."""
+    import functools
+    import jax
+
+    x, _ = euler_isometric_swiss_roll(256, seed=0)
+    d, i = knn.knn_blocked(jnp.asarray(x), k=10, block=128)
+    g = graph.knn_to_graph(d, i, n=256)
+
+    @functools.partial(jax.jit, static_argnames=("block",))
+    def apsp_unfused(g, block):
+        n = g.shape[0]
+        q = n // block
+
+        def iteration(i, g):
+            off = i * block
+            dd = jax.lax.dynamic_slice(g, (off, off), (block, block))
+            dd = ops.floyd_warshall(dd, mode="ref")
+            r = jax.lax.dynamic_slice(g, (off, 0), (block, n))
+            c = jax.lax.dynamic_slice(g, (0, off), (n, block))
+            r = ops.minplus(dd, r, mode="ref")
+            c = ops.minplus(c, dd, mode="ref")
+            return jnp.minimum(g, ops.minplus(c, r, mode="ref"))
+
+        return jax.lax.fori_loop(0, q, iteration, g)
+
+    a_fused = apsp.apsp_blocked(g, block=64, mode="ref")
+    a_unfused = apsp_unfused(g, 64)
+    np.testing.assert_array_equal(np.asarray(a_fused), np.asarray(a_unfused))
+
+
+# -------------------------------------------------- shared postprocess ----
+
+
+def test_clamp_disconnected():
+    a = jnp.asarray(
+        [[0.0, 1.0, np.inf], [1.0, 0.0, 2.0], [np.inf, 2.0, 0.0]],
+        jnp.float32,
+    )
+    out = np.asarray(clamp_disconnected(a))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0, 2], 2.2, rtol=1e-6)  # 1.1 * diameter
+    # finite entries untouched
+    np.testing.assert_array_equal(out[1], np.asarray(a[1]))
+
+
+def test_embedding_from_eig_clamps_negative():
+    q = jnp.asarray([[1.0, 1.0], [2.0, 2.0]], jnp.float32)
+    lam = jnp.asarray([4.0, -1.0], jnp.float32)
+    y = np.asarray(embedding_from_eig(q, lam))
+    np.testing.assert_allclose(y[:, 0], [2.0, 4.0], rtol=1e-6)
+    np.testing.assert_array_equal(y[:, 1], [0.0, 0.0])  # not NaN
+
+
+# ----------------------------------------------------- pipeline engine ----
+
+
+def test_pipeline_artifacts_and_driver_parity():
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = isomap.IsomapConfig(k=10, d=2, block=128)
+    pipe = ManifoldPipeline(cfg=cfg.to_pipeline())
+    art = pipe.run(x)
+    for key in ("knn_dists", "knn_idx", "graph", "geodesics_raw",
+                "geodesics", "gram", "embedding"):
+        assert key in art, key
+    res = isomap.isomap(x, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(res.embedding)
+    )
+
+
+def test_pipeline_validates_stage_graph():
+    with pytest.raises(ValueError, match="requires"):
+        ManifoldPipeline([GraphStage()])  # knn_dists/knn_idx missing
+    with pytest.raises(ValueError, match="duplicate"):
+        ManifoldPipeline([KNNStage(), KNNStage()])
+    # well-formed graphs validate
+    ManifoldPipeline(isomap_stages())
+    ManifoldPipeline(lle_stages())
+
+
+def test_pipeline_resume_round_trip(tmp_path):
+    """Kill-and-restart: a resumed pipeline restores the stage-boundary
+    artifacts and skips every completed stage, bit-identically."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    art = ManifoldPipeline(cfg=cfg, checkpoint=mgr).run(x)
+    steps = mgr.all_steps()
+    assert len(steps) == 6  # one resume point per stage
+    assert mgr.read_manifest(steps[-1])["stage"] == "eigen"
+    assert mgr.read_manifest(steps[-1])["pipeline"] == "isomap"
+
+    class Exploder:
+        """Stage that must never run: resume skips everything before it."""
+
+        name = "knn"
+        requires = ("x",)
+        provides = ("knn_dists", "knn_idx")
+
+        def run(self, ctx, a):
+            raise AssertionError("resumed pipeline re-ran a finished stage")
+
+    stages = [Exploder()] + isomap_stages()[1:]
+    mgr2 = CheckpointManager(str(tmp_path), keep=10)
+    art2 = ManifoldPipeline(stages, cfg=cfg, checkpoint=mgr2).run(
+        x, resume=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(art2["embedding"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(art["geodesics"]), np.asarray(art2["geodesics"])
+    )
+
+
+def test_pipeline_resume_from_mid_stage(tmp_path):
+    """Resume from a partial run (checkpoints only up to apsp) re-runs
+    exactly the remaining stages."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+
+    front = isomap_stages()[:3]  # knn, graph, apsp
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    ManifoldPipeline(front, cfg=cfg, checkpoint=mgr).run(x)
+    assert mgr.read_manifest(mgr.latest_step())["stage"] == "apsp"
+
+    ran = []
+
+    class Tracker:
+        def __init__(self, inner):
+            self.inner = inner
+            self.name = inner.name
+            self.requires = inner.requires
+            self.provides = inner.provides
+
+        def run(self, ctx, a):
+            ran.append(self.name)
+            return self.inner.run(ctx, a)
+
+    mgr2 = CheckpointManager(str(tmp_path), keep=10)
+    stages = [Tracker(s) for s in isomap_stages()]
+    art = ManifoldPipeline(stages, cfg=cfg, checkpoint=mgr2).run(
+        x, resume=True
+    )
+    assert ran == ["clamp", "center", "eigen"], ran
+    oracle = ManifoldPipeline(cfg=cfg).run(x)
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(oracle["embedding"])
+    )
+
+
+def test_pipeline_resume_rejects_config_mismatch(tmp_path):
+    """A checkpoint written under a different config must not be resumed
+    (a k=10 geodesic matrix is not a k=15 answer)."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    ManifoldPipeline(
+        cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr
+    ).run(x)
+
+    ran = []
+
+    class Tracker(KNNStage):
+        def run(self, ctx, a):
+            ran.append(self.name)
+            return super().run(ctx, a)
+
+    stages = [Tracker()] + isomap_stages()[1:]
+    mgr2 = CheckpointManager(str(tmp_path), keep=10)
+    ManifoldPipeline(
+        stages, cfg=PipelineConfig(k=15, d=2, block=128), checkpoint=mgr2
+    ).run(x, resume=True)
+    assert ran == ["knn"]  # full re-run, nothing resumed
+
+
+def test_pipeline_resume_rejects_input_shape_mismatch(tmp_path):
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+    ManifoldPipeline(cfg=cfg, checkpoint=mgr).run(jnp.asarray(x))
+    with pytest.raises(ValueError, match="checkpointed input"):
+        ManifoldPipeline(cfg=cfg, checkpoint=mgr).run(
+            jnp.asarray(x[:128]), resume=True
+        )
+
+
+def test_pipeline_resume_falls_back_past_filtered_checkpoints(tmp_path):
+    """checkpoint_artifacts may drop artifacts later stages require; the
+    resume scan must fall back to a boundary whose saved keys satisfy the
+    remaining `requires` chain instead of KeyError-ing."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    # knn+graph only, and the checkpoints keep none of the artifacts the
+    # downstream stages need (only x is implicitly retained)
+    ManifoldPipeline(
+        isomap_stages()[:2], cfg=cfg, checkpoint=mgr,
+        checkpoint_artifacts=(),
+    ).run(x)
+    assert mgr.read_manifest(mgr.latest_step())["stage"] == "graph"
+
+    ran = []
+
+    class Tracker:
+        def __init__(self, inner):
+            self.inner = inner
+            self.name = inner.name
+            self.requires = inner.requires
+            self.provides = inner.provides
+
+        def run(self, ctx, a):
+            ran.append(self.name)
+            return self.inner.run(ctx, a)
+
+    mgr2 = CheckpointManager(str(tmp_path), keep=10)
+    art = ManifoldPipeline(
+        [Tracker(s) for s in isomap_stages()], cfg=cfg, checkpoint=mgr2
+    ).run(x, resume=True)
+    # no usable boundary -> clean full re-run, correct result
+    assert ran == [s.name for s in isomap_stages()], ran
+    oracle = ManifoldPipeline(cfg=cfg).run(x)
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(oracle["embedding"])
+    )
+
+
+# ----------------------------------------------------------- streaming ----
+
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    x, latent = euler_isometric_swiss_roll(768, seed=3)
+    base, held_out = x[:640], x[640:]
+    cfg = isomap.IsomapConfig(k=10, d=2, block=128)
+    res_base = isomap.isomap(jnp.asarray(base), cfg, keep_geodesics=True)
+    res_full = isomap.isomap(jnp.asarray(x), cfg)
+    return x, latent, base, held_out, res_base, res_full
+
+
+def test_streaming_matches_full_batch_oracle(stream_setup):
+    """Held-out points mapped through the streaming path must land within
+    tolerance of where a full-batch Isomap (the oracle) puts them."""
+    x, latent, base, held_out, res_base, res_full = stream_setup
+    y_new = streaming.map_new_points(
+        jnp.asarray(held_out), jnp.asarray(base),
+        res_base.geodesics, res_base.embedding, k=10,
+    )
+    stream_full = np.concatenate([np.asarray(res_base.embedding),
+                                  np.asarray(y_new)])
+    # compare the two embeddings of the SAME points (procrustes aligns the
+    # arbitrary rotation/reflection/scale between the runs)
+    err = float(metrics.procrustes_error(
+        jnp.asarray(stream_full), res_full.embedding
+    ))
+    assert err < 5e-3, err
+    # and both must reconstruct the latent chart
+    err_latent = float(metrics.procrustes_error(
+        jnp.asarray(stream_full), jnp.asarray(latent)
+    ))
+    assert err_latent < 0.02, err_latent
+
+
+def test_streaming_mapper_batching_invariance(stream_setup):
+    x, latent, base, held_out, res_base, _ = stream_setup
+    mapper = streaming.StreamingMapper(
+        jnp.asarray(base), res_base.geodesics, res_base.embedding,
+        k=10, batch=32,
+    )
+    y_batched = np.asarray(mapper(jnp.asarray(held_out)))  # 128 pts, 4 batches
+    y_once = np.asarray(streaming.map_new_points(
+        jnp.asarray(held_out), jnp.asarray(base),
+        res_base.geodesics, res_base.embedding, k=10,
+    ))
+    np.testing.assert_allclose(y_batched, y_once, rtol=1e-5, atol=1e-6)
+
+
+def test_streaming_mapper_from_checkpoint(tmp_path):
+    """Pipeline artifacts persisted at a stage boundary are sufficient to
+    serve streaming queries after a restart (no refit)."""
+    x, _ = euler_isometric_swiss_roll(320, seed=3)
+    base, new = x[:256], x[256:]
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    pipe = ManifoldPipeline(
+        cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr
+    )
+    art = pipe.run(jnp.asarray(base))
+    y_live = np.asarray(
+        streaming.StreamingMapper.from_artifacts(art, k=10)(jnp.asarray(new))
+    )
+
+    mgr2 = CheckpointManager(str(tmp_path), keep=10)
+    mapper = streaming.StreamingMapper.from_checkpoint(mgr2, k=10)
+    y_restored = np.asarray(mapper(jnp.asarray(new)))
+    np.testing.assert_allclose(y_restored, y_live, rtol=1e-5, atol=1e-6)
+
+
+def test_streaming_mapper_from_checkpoint_missing(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        streaming.StreamingMapper.from_checkpoint(mgr)
+
+
+# --------------------------------------------------------- serve driver ---
+
+
+def test_serve_manifold_smoke(tmp_path):
+    from repro.launch.serve import serve_manifold
+
+    out = serve_manifold(
+        n_base=512, n_stream=64, stream_batch=32, block=128,
+        checkpoint_dir=str(tmp_path),
+    )
+    assert out["procrustes_error"] < 0.02, out
+    # artifacts persisted: a resumed serve skips the fit
+    out2 = serve_manifold(
+        n_base=512, n_stream=64, stream_batch=32, block=128,
+        checkpoint_dir=str(tmp_path), resume=True,
+    )
+    assert out2["procrustes_error"] == pytest.approx(
+        out["procrustes_error"], rel=1e-5
+    )

@@ -1,8 +1,13 @@
 """Property-based tests (hypothesis) for the system's algebraic invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.extra import numpy as hnp  # noqa: E402
 
 from repro.core import centering, metrics
 from repro.kernels import ref

@@ -124,9 +124,9 @@ def test_pipeline_deterministic_and_seekable():
 def _abstract_mesh(shape, axes):
     """Rules only need shape/axis_names; AbstractMesh avoids requiring
     real devices in the 1-CPU test process."""
-    from jax.sharding import AbstractMesh, AxisType
+    from repro.compat import abstract_mesh
 
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return abstract_mesh(shape, axes)
 
 
 def test_logical_rules_divisibility_fallback():
