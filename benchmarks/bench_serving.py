@@ -1,0 +1,158 @@
+"""Serving benchmark: open-loop arrivals through the batched request queue.
+
+Drives the BatchedMapperService + StreamingMapper stack the way a load
+balancer would: fit the base manifold once, then submit per-request arrival
+groups at a target open-loop rate and measure per-request latency at the
+scheduler's two knobs (max batch size, max batch latency).  Reports CSV:
+
+    backend,rate_pts_s,offered,p50_ms,p99_ms,mean_batch,sustained_pts_s
+
+on either pipeline backend:
+
+  * ``--backend local``  - single-device StreamingMapper.
+  * ``--backend mesh``   - the mapper dispatches through MeshBackend: the
+    anchor relaxation runs row-sharded over a fake 8-device CPU mesh
+    (XLA_FLAGS is set before jax imports, so run this as a script, not an
+    import).
+
+``--smoke`` shrinks sizes so CI exercises the queue scheduler in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("local", "mesh"), default="local")
+    ap.add_argument("--n-base", type=int, default=1024)
+    ap.add_argument("--n-stream", type=int, default=512)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-latency-ms", type=float, default=25.0)
+    ap.add_argument("--arrival", type=int, default=1,
+                    help="points per submitted request")
+    ap.add_argument("--rates", type=float, nargs="*", default=None,
+                    help="offered load in points/s (0 = closed loop, "
+                         "submit-all-at-once); default sweeps a small grid")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="tiny sizes + local-friendly rates for CI")
+    return ap
+
+
+def run(args) -> list[dict]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.pipeline import (
+        LocalBackend, ManifoldPipeline, MeshBackend, PipelineConfig,
+    )
+    from repro.core.streaming import StreamingMapper
+    from repro.data import euler_isometric_swiss_roll
+    from repro.launch.serving import BatchedMapperService
+
+    n_base, n_stream = args.n_base, args.n_stream
+    rates = args.rates
+    if args.smoke:
+        n_base, n_stream = 256, 96
+        rates = rates if rates is not None else [0.0]
+    elif rates is None:
+        rates = [500.0, 2000.0, 0.0]
+
+    x, _ = euler_isometric_swiss_roll(n_base + n_stream, seed=args.seed)
+    if args.backend == "mesh":
+        x = np.pad(x, ((0, 0), (0, 1)))  # 4 features for the model axis
+    x_base, x_stream = jnp.asarray(x[:n_base]), np.asarray(x[n_base:])
+
+    if args.backend == "mesh":
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import make_mesh
+
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev // 2, 2), ("data", "model"))
+        backend = MeshBackend(mesh)
+        x_base = jax.device_put(
+            x_base, NamedSharding(mesh, P("data", "model"))
+        )
+        block = min(args.block, n_base // (n_dev // 2))  # fit the tile
+    else:
+        backend = LocalBackend()
+        block = min(args.block, n_base)
+
+    pipe = ManifoldPipeline(
+        backend=backend,
+        cfg=PipelineConfig(k=args.k, d=2, block=block),
+    )
+    t0 = time.perf_counter()
+    art = pipe.run(x_base)
+    fit_s = time.perf_counter() - t0
+    print(f"# fit backend={args.backend} n_base={n_base} "
+          f"fit_s={fit_s:.2f}", file=sys.stderr)
+
+    mapper = StreamingMapper.from_artifacts(
+        art, k=args.k, batch=args.max_batch, backend=backend
+    )
+
+    rows = []
+    for rate in rates:
+        service = BatchedMapperService(
+            mapper,
+            max_batch=args.max_batch,
+            max_latency_ms=args.max_latency_ms,
+        )
+        with service:
+            service.warmup(x_stream.shape[1])
+            gap = args.arrival / rate if rate > 0 else 0.0
+            futures = []
+            t_start = time.perf_counter()
+            for i, lo in enumerate(range(0, n_stream, args.arrival)):
+                if gap:
+                    # open loop: pace submissions at the offered rate
+                    sleep = t_start + i * gap - time.perf_counter()
+                    if sleep > 0:
+                        time.sleep(sleep)
+                futures.append(service.submit(x_stream[lo:lo + args.arrival]))
+            for f in futures:
+                f.result()
+        stats = service.stats()
+        row = {
+            "backend": args.backend,
+            "rate_pts_s": rate,
+            "offered": n_stream,
+            "p50_ms": stats["latency_p50_ms"],
+            "p99_ms": stats["latency_p99_ms"],
+            "mean_batch": stats["mean_batch"],
+            "sustained_pts_s": stats["points_per_s"],
+        }
+        rows.append(row)
+        print(",".join(
+            f"{row[k]:.1f}" if isinstance(row[k], float) else str(row[k])
+            for k in ("backend", "rate_pts_s", "offered", "p50_ms",
+                      "p99_ms", "mean_batch", "sustained_pts_s")
+        ))
+    return rows
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.backend == "mesh" and "XLA_FLAGS" not in os.environ:
+        # must happen before any jax import in this process
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    print("backend,rate_pts_s,offered,p50_ms,p99_ms,mean_batch,"
+          "sustained_pts_s")
+    rows = run(args)
+    # the queue must actually have coalesced and served everything
+    assert rows and all(r["p50_ms"] == r["p50_ms"] for r in rows), rows
+    return rows
+
+
+if __name__ == "__main__":
+    main()

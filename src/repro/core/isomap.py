@@ -11,7 +11,10 @@
 local and mesh backends respectively.  ``landmark_isomap`` (de Silva &
 Tenenbaum; the approximate baseline the paper positions itself against)
 reuses the pipeline's kNN + graph stages and swaps the O(n^3) APSP tail
-for m landmark Bellman-Ford rows + landmark MDS + triangulation.
+for m landmark Bellman-Ford rows + landmark MDS + triangulation.  The
+landmark tail itself is backend-dispatched: :func:`landmark_tail_local`
+on one device, :func:`landmark_tail_sharded` (Bellman-Ford rows relaxed
+against the tile-sharded graph under ``shard_map``) on a mesh.
 """
 from __future__ import annotations
 
@@ -21,9 +24,11 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core import spectral
+from repro.kernels import ops
 from repro.core.pipeline import (
     APSPStage,
     GraphStage,
@@ -130,25 +135,13 @@ def isomap_distributed(
 # ------------------------------------------------- Landmark Isomap --------
 
 
-@functools.partial(jax.jit, static_argnames=("m", "d", "mode", "sweeps"))
-def _landmark_tail(
-    g: jax.Array, *, m: int, d: int, mode: str, sweeps: int = 32
-):
-    """Landmark geodesics + landmark MDS + triangulation on a built graph.
+@functools.partial(jax.jit, static_argnames=("m", "d"))
+def _landmark_mds(dl: jax.Array, *, m: int, d: int):
+    """Landmark MDS + triangulation on clamped (m, n) landmark geodesics.
 
-    landmarks = first m points (deterministic; callers may permute x).
-    Bellman-Ford sweeps: each sweep extends paths by one kNN-graph hop
-    batch; 32 sweeps covers the hop diameters of the benchmark graphs
-    (validated in tests via fixed-point check).
+    Replicated-size compute - O(m^2 d + n m d) - shared verbatim by the
+    local and mesh landmark tails (the mesh path hands in a replicated dl).
     """
-    dl = g[:m, :]  # (m, n) initial: direct edges from landmarks
-
-    def relax(_, dl):
-        return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
-
-    dl = jax.lax.fori_loop(0, sweeps, relax, dl)
-    dl = clamp_disconnected(dl)
-
     dl2 = jnp.square(dl)
     # landmark MDS
     mu_row = jnp.mean(dl2[:, :m], axis=1, keepdims=True)
@@ -165,8 +158,99 @@ def _landmark_tail(
     return y, l_emb
 
 
+@functools.partial(jax.jit, static_argnames=("m", "d", "mode", "sweeps"))
+def landmark_tail_local(
+    g: jax.Array, *, m: int, d: int, mode: str, sweeps: int = 32
+):
+    """Landmark geodesics + landmark MDS + triangulation on a built graph.
+
+    landmarks = first m points (deterministic; callers may permute x).
+    Bellman-Ford sweeps: each sweep extends paths by one kNN-graph hop
+    batch; 32 sweeps covers the hop diameters of the benchmark graphs
+    (validated in tests via fixed-point check).
+    """
+    dl = g[:m, :]  # (m, n) initial: direct edges from landmarks
+
+    def relax(_, dl):
+        return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
+
+    dl = jax.lax.fori_loop(0, sweeps, relax, dl)
+    dl = clamp_disconnected(dl)
+    return _landmark_mds(dl, m=m, d=d)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_landmark_bf_sharded(
+    mesh, n, m, sweeps, mode, data_axis, model_axis
+):
+    """Build the jit'd shard_map running the m Bellman-Ford landmark rows
+    against the tile-sharded graph; returns a replicated (m, n) dl."""
+    from repro.sharding.logical import folded_axis_index, mesh_axis_size
+
+    pd = mesh_axis_size(mesh, data_axis)
+    pm = mesh_axis_size(mesh, model_axis)
+    if n % pd or n % pm:
+        raise ValueError(f"n {n} must divide the mesh axes ({pd}, {pm})")
+    nr, nc = n // pd, n // pm
+
+    def shard_fn(g_loc):
+        di = folded_axis_index(data_axis)
+        # dl = g[:m, :]: each data shard contributes the landmark rows it
+        # owns, a masked psum + model gather replicate the (m, n) panel
+        row_ids = jnp.arange(m)
+        owner = row_ids // nr
+        local = jnp.clip(row_ids - di * nr, 0, nr - 1)
+        sl = jnp.where((owner == di)[:, None], g_loc[local], 0.0)  # (m, nc)
+        dl_cols = jax.lax.psum(sl, data_axis)
+        dl = jax.lax.all_gather(dl_cols, model_axis, axis=1, tiled=True)
+
+        def relax(_, dl):
+            # per-device partial min over its row chunk of the contraction
+            # index, completed by a pmin across the data axis; min-plus is
+            # exact in fp so the sharded sweep is bit-identical to local
+            dl_chunk = jax.lax.dynamic_slice_in_dim(dl, di * nr, nr, axis=1)
+            part = ops.minplus(dl_chunk, g_loc, mode=mode)     # (m, nc)
+            full = jax.lax.pmin(part, data_axis)
+            cols = jax.lax.all_gather(full, model_axis, axis=1, tiled=True)
+            return jnp.minimum(dl, cols)
+
+        return jax.lax.fori_loop(0, sweeps, relax, dl)
+
+    fn = compat.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=P(data_axis, model_axis),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def landmark_tail_sharded(
+    g: jax.Array,
+    mesh: Mesh,
+    *,
+    m: int,
+    d: int,
+    mode: str = "auto",
+    sweeps: int = 32,
+    data_axis: str = "data",
+    model_axis: str = "model",
+):
+    """Mesh tail: the O(m n^2) Bellman-Ford sweeps run sharded over the
+    data axis (per-device work and graph residency are 1/p of local); the
+    O(m^2) landmark MDS then runs replicated, same as the spectral stage's
+    redundant QR - centralization would cost more than it saves."""
+    bf = _make_landmark_bf_sharded(
+        mesh, g.shape[0], m, sweeps, mode, data_axis, model_axis
+    )
+    dl = clamp_disconnected(bf(g))
+    return _landmark_mds(dl, m=m, d=d)
+
+
 class LandmarkStage:
-    """Pipeline tail replacing apsp/clamp/center/eigen for L-Isomap."""
+    """Pipeline tail replacing apsp/clamp/center/eigen for L-Isomap.
+    Dispatches through the context's backend like every other stage."""
 
     name = "landmark"
     requires = ("graph",)
@@ -176,30 +260,47 @@ class LandmarkStage:
         self.m = m
 
     def run(self, ctx, art):
-        y, l_emb = _landmark_tail(
-            art["graph"], m=self.m, d=ctx.cfg.d, mode=ctx.cfg.kernel_mode
-        )
+        y, l_emb = ctx.backend.landmark_tail(ctx.cfg, art["graph"], self.m)
         return {"embedding": y, "landmark_embedding": l_emb}
 
 
 def landmark_isomap(
-    x: jax.Array, *, k: int, m: int, d: int, mode: str = "auto"
+    x: jax.Array,
+    *,
+    k: int,
+    m: int,
+    d: int,
+    mode: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+    model_axis: str = "model",
 ):
     """L-Isomap baseline (paper SV): m landmarks, Bellman-Ford geodesics
     from landmarks only, landmark MDS + triangulation.  O(m n^2) instead of
     O(n^3); approximate.  Composed from the pipeline's kNN/graph stages +
-    the landmark tail stage."""
+    the landmark tail stage; pass `mesh` to run the same stages over the
+    MeshBackend (sharded kNN + sharded landmark rows)."""
+    x = jnp.asarray(x)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        backend = MeshBackend(
+            mesh, data_axis=data_axis, model_axis=model_axis
+        )
+        x = jax.device_put(
+            x, NamedSharding(mesh, PartitionSpec(data_axis, model_axis))
+        )
+    else:
+        backend = LocalBackend()
     pipe = ManifoldPipeline(
         [KNNStage(), GraphStage(), LandmarkStage(m)],
-        backend=LocalBackend(),
+        backend=backend,
         cfg=PipelineConfig(k=k, d=d, kernel_mode=mode),
         name="landmark_isomap",
     )
-    art = pipe.run(jnp.asarray(x))
+    art = pipe.run(x)
     return art["embedding"], art["landmark_embedding"]
 
 
 def apsp_ops_minplus(a, b, mode):
-    from repro.kernels import ops
-
     return ops.minplus(a, b, mode=mode)

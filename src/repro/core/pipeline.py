@@ -31,6 +31,16 @@ mapper (:class:`repro.core.streaming.StreamingMapper`) serves new-point
 queries straight from a fitted pipeline's ``geodesics`` + ``embedding``
 artifacts (Schoeneman et al.'s stream/batch combination point).
 
+The backend protocol covers the approximate/streaming tail too: both
+backends implement ``landmark_tail`` (the L-Isomap Bellman-Ford rows +
+landmark MDS) and ``map_new_points`` (the streaming anchor relaxation), so
+:class:`~repro.core.isomap.LandmarkStage` and the streaming mapper are
+backend-agnostic like every other stage - on the mesh the landmark rows
+and the anchor relaxation are sharded over the data axis via ``shard_map``.
+In front of the mapper, :mod:`repro.launch.serving` provides the
+request/response surface: a batched arrival queue with max-batch-size /
+max-batch-latency scheduling that drains into the mapper on either backend.
+
 LLE registers its own tail stages (``lle_weights``, ``lle_eigen``) behind
 the shared ``knn`` stage - the paper's "extends to other spectral methods
 with minimal effort" claim, now expressed as stage substitution.
@@ -96,6 +106,25 @@ class LocalBackend:
     def eigen(self, cfg: PipelineConfig, b):
         return spectral.power_iteration(
             b, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
+        )
+
+    def landmark_tail(self, cfg: PipelineConfig, g, m: int):
+        from repro.core.isomap import landmark_tail_local
+
+        return landmark_tail_local(g, m=m, d=cfg.d, mode=cfg.kernel_mode)
+
+    def row_mean_sq(self, geodesics):
+        from repro.core.streaming import geodesic_row_mean_sq
+
+        return geodesic_row_mean_sq(geodesics)
+
+    def map_new_points(
+        self, x_new, x_base, geodesics, embedding, *, k: int, mean_sq=None
+    ):
+        from repro.core.streaming import map_new_points
+
+        return map_new_points(
+            x_new, x_base, geodesics, embedding, k=k, mean_sq=mean_sq
         )
 
 
@@ -167,6 +196,32 @@ class MeshBackend:
             data_axis=self.data_axis, model_axis=self.model_axis,
         )
         return eig_fn(b)
+
+    def landmark_tail(self, cfg: PipelineConfig, g, m: int):
+        from repro.core.isomap import landmark_tail_sharded
+
+        return landmark_tail_sharded(
+            g, self.mesh, m=m, d=cfg.d, mode=cfg.kernel_mode,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+
+    def row_mean_sq(self, geodesics):
+        from repro.core.streaming import _make_row_mean_sq_sharded
+
+        return _make_row_mean_sq_sharded(
+            self.mesh, geodesics.shape[0], self.data_axis, self.model_axis
+        )(geodesics)
+
+    def map_new_points(
+        self, x_new, x_base, geodesics, embedding, *, k: int, mean_sq=None
+    ):
+        from repro.core.streaming import map_new_points_sharded
+
+        return map_new_points_sharded(
+            x_new, x_base, geodesics, embedding, self.mesh, k=k,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+            mean_sq=mean_sq,
+        )
 
 
 # -------------------------------------------------------------- stages ----
@@ -307,6 +362,17 @@ def lle_stages() -> list[Stage]:
 # ------------------------------------------------------------ pipeline ----
 
 
+def _same_input(x_saved, x) -> bool:
+    """Value check for resume: a same-shape but different dataset must not
+    silently adopt the checkpointed artifacts (shape alone can't tell a
+    seed-0 fit from a seed-1 run).  Compared in the saved dtype so passing
+    the original points at a wider dtype still resumes."""
+    import numpy as np
+
+    x_saved = np.asarray(x_saved)
+    return bool(np.array_equal(x_saved, np.asarray(x, dtype=x_saved.dtype)))
+
+
 class ManifoldPipeline:
     """Executes a stage list over one backend, checkpointing at stage
     boundaries.
@@ -408,10 +474,13 @@ class ManifoldPipeline:
                 available |= set(s.provides)
             if not satisfiable:
                 continue
-            art = {
-                k: jnp.asarray(v)
-                for k, v in self.checkpoint.restore_flat(step).items()
-            }
+            try:
+                restored = self.checkpoint.restore_flat(step)
+            except (OSError, KeyError):
+                # step GC'd between the manifest read and the array load
+                # (async writer retention), or arrays missing: fall back
+                continue
+            art = {k: jnp.asarray(v) for k, v in restored.items()}
             return start, art
         return 0, None
 
@@ -425,10 +494,14 @@ class ManifoldPipeline:
             start, restored = self._find_resume_point()
             if restored is not None:
                 x_saved = restored.get("x")
-                if x_saved is not None and x_saved.shape != x.shape:
+                if x_saved is not None and (
+                    x_saved.shape != x.shape
+                    or not _same_input(x_saved, x)
+                ):
                     raise ValueError(
-                        f"resume: checkpointed input has shape "
-                        f"{x_saved.shape} but run() was given {x.shape}; "
+                        f"resume: checkpointed input (shape "
+                        f"{x_saved.shape}) does not match the points "
+                        f"run() was given (shape {x.shape}); "
                         "pass the original points, a fresh checkpoint "
                         "directory, or resume=False"
                     )

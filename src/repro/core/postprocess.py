@@ -13,9 +13,16 @@ import jax.numpy as jnp
 def clamp_disconnected(a: jax.Array) -> jax.Array:
     """Replace +inf geodesics (disconnected components) by 1.1x the graph
     diameter.  A no-op on connected graphs (the paper's k is chosen for a
-    single component), but keeps the spectral stage finite otherwise."""
+    single component), but keeps the spectral stage finite otherwise.
+
+    A graph with no finite off-diagonal entry (every point isolated) has
+    diameter 0; clamping to 1.1 * 0 would silently collapse all pairwise
+    distances to zero, so the fallback substitutes a unit distance - the
+    embedding is meaningless either way, but stays finite and non-degenerate
+    instead of mapping every point to the origin."""
     finite = jnp.isfinite(a)
     diam = jnp.max(jnp.where(finite, a, 0.0))
+    diam = jnp.where(diam > 0, diam, 1.0)
     return jnp.where(finite, a, 1.1 * diam)
 
 

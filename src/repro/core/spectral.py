@@ -71,8 +71,15 @@ def power_iteration(
 # ------------------------------------------------------------- sharded ----
 
 
-def _matvec_local(a_loc, q, *, data_axis, model_axis, nc):
-    """Local (nr, nc) tile times replicated (n, d): returns replicated V."""
+def matvec_sharded(a_loc, q, *, data_axis, model_axis, nc):
+    """Local (nr, nc) tile times replicated (n, d): returns replicated V.
+
+    The shared "sharded matrix x replicated tall-skinny" building block:
+    slice q by model index, contract the local tile, psum the column
+    partials over `model_axis`, all-gather the row blocks over `data_axis`.
+    Used by the power-iteration body below and by the streaming mapper's
+    sharded triangulation (row statistics of the sharded geodesics).
+    Must be called inside a ``shard_map`` over both axes."""
     from repro.sharding.logical import folded_axis_index
 
     mi = folded_axis_index(model_axis)
@@ -109,7 +116,7 @@ def make_power_iteration_sharded(
 
         def body(carry):
             q, _, it = carry
-            v = _matvec_local(
+            v = matvec_sharded(
                 a_loc, q, data_axis=data_axis, model_axis=model_axis, nc=nc
             )
             q_new, _ = jnp.linalg.qr(v)      # replicated redundant QR
@@ -120,7 +127,7 @@ def make_power_iteration_sharded(
         q, delta, it = jax.lax.while_loop(
             cond, body, (q0, jnp.array(jnp.inf, a_loc.dtype), jnp.array(0))
         )
-        aq = _matvec_local(
+        aq = matvec_sharded(
             a_loc, q, data_axis=data_axis, model_axis=model_axis, nc=nc
         )
         lam = jnp.diag(q.T @ aq)

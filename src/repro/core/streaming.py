@@ -11,6 +11,16 @@ against the embedding's eigenbasis.  :class:`StreamingMapper` packages
 that as a serving object constructed straight from pipeline artifacts
 (in-memory or restored from a stage-boundary checkpoint) and maps arrival
 batches with bounded peak memory.
+
+Like every pipeline stage, the mapper dispatches through the backend
+protocol: on a :class:`~repro.core.pipeline.LocalBackend` the relaxation is
+the single-device :func:`map_new_points`; on a
+:class:`~repro.core.pipeline.MeshBackend` it runs as a ``shard_map`` over
+the data axis against the row-sharded geodesics
+(:func:`map_new_points_sharded`) - the anchor rows are completed with a
+masked psum and the ``min(anchor_d + A[idx])`` relaxation is computed on
+each device's column chunk, so per-query work and memory scale 1/p with the
+mesh.
 """
 from __future__ import annotations
 
@@ -19,8 +29,33 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.kernels import ops
+
+# Floor for the per-column eigenvalue estimate in the triangulation
+# pseudo-inverse.  ``embedding_from_eig`` clamps negative eigenvalues to
+# exactly 0, so a degenerate column in the base embedding would otherwise
+# divide by zero and emit NaN coordinates for every streamed point.
+# Matches the landmark tail's floor in ``core/isomap.py``.
+_EIG_FLOOR = 1e-12
+
+
+def _eigenbasis_pinv(y_base):
+    """Pseudo-inverse of the base embedding's eigenbasis for the L-Isomap
+    triangulation; shared by the local and sharded paths."""
+    n = y_base.shape[0]
+    lam = jnp.sum(y_base * y_base, axis=0) / n           # eigvals / n
+    lam = jnp.maximum(lam, _EIG_FLOOR)
+    return y_base / (lam[None, :] * n)                   # (n, d) pseudo-inv
+
+
+@jax.jit
+def geodesic_row_mean_sq(a_base: jax.Array) -> jax.Array:
+    """Row means of the squared base geodesics - the O(n^2) constant of the
+    triangulation.  Serving objects compute it once per fit, not per batch."""
+    return jnp.mean(jnp.square(a_base), axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -31,8 +66,10 @@ def map_new_points(
     y_base: jax.Array,     # (n, d) embedding of the initial batch
     *,
     k: int = 10,
+    mean_sq: jax.Array | None = None,   # (n,) precomputed row means of a^2
 ):
     """Returns (m, d) coordinates for the new points."""
+    k = min(k, x_base.shape[0])
     # geodesic estimate: through the k nearest base anchors
     d2 = ops.pairwise_sq_dists(x_new, x_base)            # (m, n)
     neg, idx = jax.lax.top_k(-d2, k)                     # k anchors each
@@ -43,11 +80,120 @@ def map_new_points(
     )                                                     # (m, n)
 
     # L-Isomap triangulation against the base embedding's eigenbasis
-    lam = jnp.sum(y_base * y_base, axis=0) / y_base.shape[0]  # eigvals/n
-    pinv = y_base / (lam[None, :] * y_base.shape[0])     # (n, d) pseudo-inv
-    mean_sq = jnp.mean(jnp.square(a_base), axis=1)       # (n,)
+    pinv = _eigenbasis_pinv(y_base)
+    if mean_sq is None:
+        mean_sq = jnp.mean(jnp.square(a_base), axis=1)   # (n,)
     y_new = -0.5 * (jnp.square(geo) - mean_sq[None, :]) @ pinv
     return y_new
+
+
+# ------------------------------------------------------------- sharded ----
+
+
+@functools.lru_cache(maxsize=None)
+def _make_row_mean_sq_sharded(mesh, n, data_axis, model_axis):
+    """Sharded :func:`geodesic_row_mean_sq`: row means of the squared
+    tile-sharded geodesics via the shared sharded-matvec (A^{o2} @ 1/n)."""
+    from repro.core import spectral
+    from repro.sharding.logical import mesh_axis_size
+
+    nc = n // mesh_axis_size(mesh, model_axis)
+
+    def shard_fn(a_loc):
+        return spectral.matvec_sharded(
+            jnp.square(a_loc), jnp.full((n, 1), 1.0 / n, a_loc.dtype),
+            data_axis=data_axis, model_axis=model_axis, nc=nc,
+        )[:, 0]                                          # (n,) replicated
+
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=P(data_axis, model_axis), out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_map_new_points_sharded(
+    mesh, n, k, data_axis, model_axis, mode
+):
+    """Build the jit'd shard_map body for :func:`map_new_points_sharded`.
+
+    Cached per (mesh, n, k) so repeated serving calls reuse one compiled
+    executable per arrival-batch shape."""
+    from repro.sharding.logical import folded_axis_index, mesh_axis_size
+
+    pd = mesh_axis_size(mesh, data_axis)
+    pm = mesh_axis_size(mesh, model_axis)
+    if n % pd or n % pm:
+        raise ValueError(
+            f"base-set size {n} must divide the mesh axes ({pd}, {pm})"
+        )
+    nr = n // pd
+
+    def shard_fn(x_new, xb_loc, a_loc, y_base, mean_sq):
+        di = folded_axis_index(data_axis)
+        # kNN anchors against the row-sharded base set: per-shard distance
+        # chunks, gathered so every device ranks the same full row
+        d2_loc = ops.pairwise_sq_dists(x_new, xb_loc, mode=mode)  # (m, nr)
+        d2 = jax.lax.all_gather(d2_loc, data_axis, axis=1, tiled=True)
+        neg, idx = jax.lax.top_k(-d2, k)                 # (m, k) global ids
+        anchor_d = jnp.sqrt(jnp.maximum(-neg, 0.0))      # (m, k)
+        # complete the k anchor rows of the tile-sharded geodesics: each
+        # device contributes the rows it owns, a masked psum fills the rest
+        owner = idx // nr                                # (m, k)
+        local = jnp.clip(idx - di * nr, 0, nr - 1)
+        rows = jnp.where(
+            (owner == di)[:, :, None], a_loc[local], 0.0
+        )                                                # (m, k, nc)
+        rows = jax.lax.psum(rows, data_axis)
+        # anchor relaxation on this device's column chunk of the geodesics
+        geo_loc = jnp.min(anchor_d[:, :, None] + rows, axis=1)   # (m, nc)
+        geo = jax.lax.all_gather(geo_loc, model_axis, axis=1, tiled=True)
+        # replicated triangulation against the precomputed row statistics
+        pinv = _eigenbasis_pinv(y_base)
+        return -0.5 * (jnp.square(geo) - mean_sq[None, :]) @ pinv
+
+    fn = compat.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            P(), P(data_axis), P(data_axis, model_axis), P(), P(),
+        ),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def map_new_points_sharded(
+    x_new: jax.Array,
+    x_base: jax.Array,
+    a_base: jax.Array,
+    y_base: jax.Array,
+    mesh,
+    *,
+    k: int = 10,
+    data_axis: str = "data",
+    model_axis: str = "model",
+    mode: str = "auto",
+    mean_sq: jax.Array | None = None,
+):
+    """Mesh-sharded :func:`map_new_points`: x_base row-sharded over
+    `data_axis`, a_base tile-sharded, x_new/y_base replicated.  Matches the
+    local path within float tolerance (the relaxation itself is exact; only
+    the row-mean reduction order differs).  Pass a precomputed ``mean_sq``
+    (see :class:`StreamingMapper`) to skip the per-call O(n^2/p) row
+    reduction."""
+    n = x_base.shape[0]
+    if mean_sq is None:
+        mean_sq = _make_row_mean_sq_sharded(
+            mesh, n, data_axis, model_axis
+        )(a_base)
+    fn = _make_map_new_points_sharded(
+        mesh, n, min(k, n), data_axis, model_axis, mode
+    )
+    return fn(x_new, x_base, a_base, y_base, mean_sq)
 
 
 class StreamingMapper:
@@ -65,6 +211,11 @@ class StreamingMapper:
 
     Queries are mapped in `batch` chunks so peak memory stays at
     O(batch * n) regardless of arrival-burst size.
+
+    backend: a pipeline backend (LocalBackend default).  Passing the
+    pipeline's MeshBackend serves queries with the geodesics row-sharded
+    over the mesh (state is ``device_put`` onto the mesh once, at
+    construction).
     """
 
     def __init__(
@@ -75,57 +226,101 @@ class StreamingMapper:
         *,
         k: int = 10,
         batch: int = 256,
+        backend=None,
     ):
         n = x_base.shape[0]
         assert geodesics.shape == (n, n), (geodesics.shape, n)
         assert embedding.shape[0] == n, (embedding.shape, n)
-        self.x_base = jnp.asarray(x_base)
-        self.geodesics = jnp.asarray(geodesics)
-        self.embedding = jnp.asarray(embedding)
-        self.k = k
+        if backend is None:
+            from repro.core.pipeline import LocalBackend
+
+            backend = LocalBackend()
+        self.backend = backend
+        self.k = min(k, n)
         self.batch = batch
+        if getattr(backend, "kind", "local") == "sharded":
+            from jax.sharding import NamedSharding
+
+            rows = NamedSharding(backend.mesh, P(backend.data_axis))
+            repl = NamedSharding(backend.mesh, P())
+            self.x_base = jax.device_put(jnp.asarray(x_base), rows)
+            self.geodesics = jax.device_put(
+                jnp.asarray(geodesics), backend.tile_spec
+            )
+            self.embedding = jax.device_put(jnp.asarray(embedding), repl)
+        else:
+            self.x_base = jnp.asarray(x_base)
+            self.geodesics = jnp.asarray(geodesics)
+            self.embedding = jnp.asarray(embedding)
+        # the O(n^2) triangulation constant: once per fit, not per batch
+        self.mean_sq = self.backend.row_mean_sq(self.geodesics)
 
     @classmethod
-    def from_artifacts(cls, artifacts: dict, *, k: int = 10, batch: int = 256):
+    def from_artifacts(
+        cls, artifacts: dict, *, k: int = 10, batch: int = 256, backend=None
+    ):
         """Build from a ManifoldPipeline.run() artifact namespace."""
         return cls(
             artifacts["x"], artifacts["geodesics"], artifacts["embedding"],
-            k=k, batch=batch,
+            k=k, batch=batch, backend=backend,
         )
 
     @classmethod
-    def from_checkpoint(cls, manager, *, k: int = 10, batch: int = 256):
+    def from_checkpoint(
+        cls, manager, *, k: int = 10, batch: int = 256, backend=None
+    ):
         """Restore the newest pipeline checkpoint holding the needed
-        artifacts (i.e. any stage boundary at or after ``eigen``)."""
+        artifacts (i.e. any stage boundary at or after ``eigen``).
+
+        Tolerant scan (same contract as the pipeline's resume scan): a
+        concurrently GC'd or partially written step - manifest unreadable,
+        or missing the ``keys`` field - is skipped, falling back to the
+        next-older boundary instead of crashing the serving process."""
         for step in reversed(manager.all_steps()):
-            manifest = manager.read_manifest(step)
-            if {"x", "geodesics", "embedding"} <= set(manifest["keys"]):
+            try:
+                manifest = manager.read_manifest(step)
+            except OSError:
+                continue
+            if {"x", "geodesics", "embedding"} <= set(
+                manifest.get("keys", [])
+            ):
+                try:
+                    art = manager.restore_flat(step)
+                except (OSError, KeyError):
+                    # step GC'd between the manifest read and the array
+                    # load, or arrays missing: fall back to an older one
+                    continue
                 return cls.from_artifacts(
-                    manager.restore_flat(step), k=k, batch=batch
+                    art, k=k, batch=batch, backend=backend
                 )
         raise FileNotFoundError(
             f"no checkpoint in {manager.directory} holds the "
             "x/geodesics/embedding artifacts (pipeline not run to eigen?)"
         )
 
+    def _map_batch(self, x_new: jax.Array) -> jax.Array:
+        return self.backend.map_new_points(
+            x_new, self.x_base, self.geodesics, self.embedding,
+            k=self.k, mean_sq=self.mean_sq,
+        )
+
     def __call__(self, x_new: jax.Array) -> jax.Array:
         """Map (m, D) arrivals -> (m, d) manifold coordinates, batched."""
         x_new = jnp.asarray(x_new)
         m = x_new.shape[0]
+        if m == 0:
+            return jnp.zeros((0, self.embedding.shape[1]),
+                             self.embedding.dtype)
         if m <= self.batch:
-            return map_new_points(
-                x_new, self.x_base, self.geodesics, self.embedding, k=self.k
-            )
+            return self._map_batch(x_new)
         outs = []
         for lo in range(0, m, self.batch):
-            outs.append(
-                map_new_points(
-                    x_new[lo : lo + self.batch],
-                    self.x_base, self.geodesics, self.embedding, k=self.k,
-                )
-            )
+            outs.append(self._map_batch(x_new[lo : lo + self.batch]))
         return jnp.concatenate(outs, axis=0)
 
     def map_stream(self, batches) -> np.ndarray:
         """Consume an iterable of arrival batches; returns stacked coords."""
-        return np.concatenate([np.asarray(self(b)) for b in batches], axis=0)
+        outs = [np.asarray(self(b)) for b in batches]
+        if not outs:
+            return np.zeros((0, self.embedding.shape[1]))
+        return np.concatenate(outs, axis=0)

@@ -6,8 +6,10 @@ the dry-run lowers for the prefill_32k / decode_32k / long_500k shapes.
 
 ``python -m repro.launch.serve --manifold swissroll`` drives the staged
 ManifoldPipeline instead: fit exact Isomap on a base batch (stage-boundary
-checkpointed), then serve streamed new-point batches from the persisted
-geodesic + eigenbasis artifacts via StreamingMapper.
+checkpointed), then serve streamed arrivals as a request/response service -
+per-point requests flow through the BatchedMapperService arrival queue
+(max-batch-size / max-batch-latency scheduling) into the StreamingMapper,
+and the driver reports p50/p99 request latency alongside throughput.
 """
 from __future__ import annotations
 
@@ -102,19 +104,26 @@ def serve_manifold(
     k: int = 10,
     d: int = 2,
     block: int = 128,
+    max_latency_ms: float = 25.0,
+    arrival: int = 1,
     checkpoint_dir: str | None = None,
     resume: bool = False,
     seed: int = 0,
 ):
     """Fit the staged Isomap pipeline on a base batch, then serve streamed
-    arrivals from its persisted artifacts.  Returns timing + quality."""
+    arrivals as a request/response service: each arrival group (``arrival``
+    points) is submitted to a :class:`BatchedMapperService` whose scheduler
+    coalesces requests up to ``stream_batch`` points or ``max_latency_ms``
+    of queueing, whichever first, and drains them into the StreamingMapper.
+    Returns timing + per-request latency percentiles + quality."""
     from repro.core import metrics
     from repro.core.pipeline import ManifoldPipeline, PipelineConfig
     from repro.core.streaming import StreamingMapper
     from repro.data import euler_isometric_swiss_roll
+    from repro.launch.serving import BatchedMapperService
 
     x, latent = euler_isometric_swiss_roll(n_base + n_stream, seed=seed)
-    x_base, x_stream = jnp.asarray(x[:n_base]), jnp.asarray(x[n_base:])
+    x_base, x_stream = jnp.asarray(x[:n_base]), np.asarray(x[n_base:])
 
     checkpoint = None
     if checkpoint_dir:
@@ -131,13 +140,19 @@ def serve_manifold(
     t_fit = time.time() - t0
 
     mapper = StreamingMapper.from_artifacts(art, k=k, batch=stream_batch)
-    t0 = time.time()
-    batches = [
-        x_stream[lo : lo + stream_batch]
-        for lo in range(0, n_stream, stream_batch)
-    ]
-    y_stream = mapper.map_stream(batches)
-    t_serve = time.time() - t0
+    service = BatchedMapperService(
+        mapper, max_batch=stream_batch, max_latency_ms=max_latency_ms
+    )
+    with service:
+        service.warmup(x_stream.shape[1])
+        t0 = time.time()
+        futures = [
+            service.submit(x_stream[lo : lo + arrival])
+            for lo in range(0, n_stream, arrival)
+        ]
+        y_stream = np.concatenate([f.result() for f in futures], axis=0)
+        t_serve = time.time() - t0
+    stats = service.stats()
 
     full = np.concatenate([np.asarray(art["embedding"]), y_stream])
     err = float(
@@ -147,6 +162,10 @@ def serve_manifold(
         "fit_s": t_fit,
         "serve_s": t_serve,
         "points_per_s": n_stream / max(t_serve, 1e-9),
+        "latency_p50_ms": stats["latency_p50_ms"],
+        "latency_p99_ms": stats["latency_p99_ms"],
+        "mean_batch": stats["mean_batch"],
+        "requests": stats["requests"],
         "procrustes_error": err,
         "n_base": n_base,
         "n_stream": n_stream,
@@ -159,13 +178,17 @@ def _sample(logits, key, temperature):
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=configs.ARCHS)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction: --smoke / --no-smoke (store_true with
+    # default=True made the full configs unreachable from the CLI)
+    ap.add_argument(
+        "--smoke", action=argparse.BooleanOptionalAction, default=True
+    )
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument(
         "--manifold", choices=("swissroll",),
@@ -173,19 +196,31 @@ def main():
     )
     ap.add_argument("--n-base", type=int, default=512)
     ap.add_argument("--n-stream", type=int, default=256)
-    ap.add_argument("--stream-batch", type=int, default=64)
+    ap.add_argument("--stream-batch", type=int, default=64,
+                    help="scheduler max batch size (points)")
+    ap.add_argument("--max-latency-ms", type=float, default=25.0,
+                    help="scheduler max queueing latency before flush")
+    ap.add_argument("--arrival", type=int, default=1,
+                    help="points per submitted request")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--d", type=int, default=2)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
     if args.manifold:
         out = serve_manifold(
             n_base=args.n_base,
             n_stream=args.n_stream,
             stream_batch=args.stream_batch,
+            max_latency_ms=args.max_latency_ms,
+            arrival=args.arrival,
             k=args.k,
             d=args.d,
             block=args.block,
@@ -197,6 +232,9 @@ def main():
             f"[serve manifold] fit={out['fit_s']:.2f}s "
             f"serve={out['serve_s']:.3f}s "
             f"({out['points_per_s']:.0f} pts/s) "
+            f"p50={out['latency_p50_ms']:.1f}ms "
+            f"p99={out['latency_p99_ms']:.1f}ms "
+            f"mean_batch={out['mean_batch']:.1f} "
             f"err={out['procrustes_error']:.2e}"
         )
         return

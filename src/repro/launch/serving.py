@@ -1,0 +1,218 @@
+"""Batched request/response serving for the streaming manifold mapper.
+
+``serve.py --manifold`` used to be a fixed batch loop; this module is the
+real serving surface in front of :class:`repro.core.streaming.StreamingMapper`
+(local or mesh backend - the mapper is backend-agnostic, so the queue is
+too):
+
+* :class:`BatchedMapperService` - an arrival queue drained by a scheduler
+  thread under the classic two-knob policy: flush when ``max_batch`` points
+  have accumulated OR when the oldest waiting request has been queued for
+  ``max_latency_ms`` (whichever first).  Callers get a
+  :class:`concurrent.futures.Future` per request, so open-loop load
+  generators and RPC frontends compose naturally.
+* Fixed-shape execution: coalesced batches are zero-padded to ``max_batch``
+  rows by default so the device executable is compiled exactly once, not
+  once per coalesced size - p99 latency is jitter, not recompilation.
+* :meth:`BatchedMapperService.stats` - per-request latency percentiles
+  (p50/p99), batch-occupancy, and sustained points/s, the numbers the
+  serving benchmark (``benchmarks/bench_serving.py``) reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray          # (n_i, D) arrival group
+    future: Future
+    t_submit: float        # monotonic seconds
+
+
+class BatchedMapperService:
+    """Queue + scheduler in front of a ``mapper(x) -> y`` callable.
+
+    mapper: anything mapping an (m, D) array to an (m, d) array - in this
+    repo a StreamingMapper on either pipeline backend.
+    max_batch: flush as soon as this many points are waiting.
+    max_latency_ms: flush when the oldest waiting request has been queued
+    this long, even if the batch is not full (bounds tail latency under
+    light load).
+    pad_batches: zero-pad every coalesced batch to exactly ``max_batch``
+    rows before calling the mapper (one compiled shape; padding rows are
+    sliced off the result).  Coalescing never mixes requests past
+    ``max_batch`` - an overflowing request opens the next batch instead -
+    so only a single request larger than ``max_batch`` ever produces an
+    off-shape (unpadded) flush.
+    """
+
+    def __init__(
+        self,
+        mapper,
+        *,
+        max_batch: int = 64,
+        max_latency_ms: float = 10.0,
+        pad_batches: bool = True,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.mapper = mapper
+        self.max_batch = max_batch
+        self.max_latency_s = max_latency_ms / 1e3
+        self.pad_batches = pad_batches
+        self._queue: queue.Queue[_Request] = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._latencies: list[float] = []
+        self._batch_sizes: list[int] = []
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._n_points = 0
+
+    # --------------------------------------------------------- lifecycle --
+
+    def start(self) -> "BatchedMapperService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        """Stop the scheduler; pending requests are drained first."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def warmup(self, dim: int):
+        """Compile the fixed-shape executable before taking traffic."""
+        self.mapper(np.zeros((self.max_batch, dim), np.float32))
+
+    # ----------------------------------------------------------- clients --
+
+    def submit(self, x) -> Future:
+        """Enqueue one arrival (D,) or arrival group (g, D); returns a
+        Future resolving to the (g, d) manifold coordinates."""
+        if self._thread is None:
+            raise RuntimeError("service not started (use `with service:`)")
+        x = np.atleast_2d(np.asarray(x))
+        req = _Request(x=x, future=Future(), t_submit=time.monotonic())
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = req.t_submit
+        self._queue.put(req)
+        return req.future
+
+    def map(self, x) -> np.ndarray:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(x).result()
+
+    # --------------------------------------------------------- scheduler --
+
+    def _loop(self):
+        pending: _Request | None = None   # overflow carried to next batch
+        while True:
+            if pending is not None:
+                first, pending = pending, None
+            else:
+                try:
+                    first = self._queue.get(timeout=0.01)
+                except queue.Empty:
+                    if self._stop.is_set() and self._queue.empty():
+                        return
+                    continue
+            batch = [first]
+            count = first.x.shape[0]
+            deadline = first.t_submit + self.max_latency_s
+            while count < self.max_batch:
+                timeout = deadline - time.monotonic()
+                try:
+                    # past the deadline, still drain whatever is already
+                    # queued (a slow flush must not collapse the next
+                    # batch to size 1 under backlog)
+                    req = (
+                        self._queue.get(timeout=timeout)
+                        if timeout > 0
+                        else self._queue.get_nowait()
+                    )
+                except queue.Empty:
+                    break
+                if count + req.x.shape[0] > self.max_batch:
+                    # would overflow the fixed compiled shape: flush now,
+                    # open the next batch with this request
+                    pending = req
+                    break
+                batch.append(req)
+                count += req.x.shape[0]
+            self._flush(batch)
+
+    def _flush(self, reqs: list[_Request]):
+        xs = np.concatenate([r.x for r in reqs], axis=0)
+        n = xs.shape[0]
+        try:
+            if self.pad_batches and 0 < n < self.max_batch:
+                pad = np.zeros((self.max_batch - n, xs.shape[1]), xs.dtype)
+                y = np.asarray(self.mapper(np.concatenate([xs, pad])))[:n]
+            else:
+                y = np.asarray(self.mapper(xs))
+        except Exception as e:  # pragma: no cover - surfaced via futures
+            for r in reqs:
+                r.future.set_exception(e)
+            return
+        t_done = time.monotonic()
+        off = 0
+        for r in reqs:
+            g = r.x.shape[0]
+            r.future.set_result(y[off : off + g])
+            off += g
+        with self._lock:
+            self._latencies.extend(t_done - r.t_submit for r in reqs)
+            self._batch_sizes.append(n)
+            self._n_points += n
+            self._t_last = t_done
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        """Latency percentiles + sustained throughput over the service's
+        lifetime so far."""
+        with self._lock:
+            lat = np.asarray(self._latencies)
+            sizes = np.asarray(self._batch_sizes)
+            n_points = self._n_points
+            wall = (
+                (self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0
+            )
+        if lat.size == 0:
+            return {
+                "requests": 0, "points": 0, "batches": 0,
+                "latency_p50_ms": float("nan"),
+                "latency_p99_ms": float("nan"),
+                "mean_batch": float("nan"), "points_per_s": 0.0,
+            }
+        return {
+            "requests": int(lat.size),
+            "points": int(n_points),
+            "batches": int(sizes.size),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_batch": float(sizes.mean()),
+            "points_per_s": n_points / max(wall, 1e-9),
+        }
