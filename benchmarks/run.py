@@ -130,7 +130,13 @@ def bench_spectral():
 
 
 def bench_pipeline():
-    """Staged ManifoldPipeline end-to-end + streaming serve throughput."""
+    """Staged ManifoldPipeline end-to-end + streaming serve throughput +
+    checkpoint-payload discipline (liveness pruning keeps every boundary
+    O(n^2), asserted, not just reported)."""
+    import os
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
     from repro.core.pipeline import ManifoldPipeline, PipelineConfig
     from repro.core.streaming import StreamingMapper
     from repro.data import euler_isometric_swiss_roll
@@ -155,6 +161,35 @@ def bench_pipeline():
         f"{n_stream / t / 1e3:.1f}_kpts_s",
     )
 
+    # checkpoint payloads: the lifecycle engine persists only the live
+    # artifact set, so no boundary may exceed ~2 (n, n) fp32 arrays (the
+    # worst boundary holds geodesics + gram) + small n-sized extras
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=100)
+        ckpt_pipe = ManifoldPipeline(
+            cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr
+        )
+        ckpt_pipe.run(x_base)
+        nn_bytes = n * n * 4
+        budget = int(2.25 * nn_bytes)
+        worst = 0
+        for step in mgr.all_steps():
+            payload = os.path.getsize(
+                os.path.join(td, f"step_{step:010d}", "arrays.npz")
+            )
+            worst = max(worst, payload)
+            assert payload <= budget, (
+                f"step {step} checkpoint payload {payload}B exceeds the "
+                f"O(n^2) budget {budget}B - liveness pruning regressed"
+            )
+        final = mgr.read_manifest(mgr.all_steps()[-1])
+        dropped = {"graph", "geodesics_raw", "gram"}
+        assert not dropped & set(final["keys"]), final["keys"]
+        _row(
+            f"pipeline_ckpt_worst_n{n}", worst / 1e6,
+            f"{worst / nn_bytes:.2f}_nn_arrays",
+        )
+
 
 def bench_lm_smoke():
     """One smoke train-step timing per architecture family."""
@@ -175,14 +210,31 @@ def bench_lm_smoke():
         _row(f"lm_smoke_loss_{arch}", t, "")
 
 
+_BENCHES = {
+    "kernels": bench_kernels,
+    "scaling": bench_scaling,
+    "blocksize": bench_blocksize,
+    "spectral": bench_spectral,
+    "pipeline": bench_pipeline,
+    "lm": bench_lm_smoke,
+}
+
+
 def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", choices=sorted(_BENCHES), action="append",
+        help="run just the named benchmark group(s); default all "
+        "(CI runs --only pipeline for the checkpoint-payload assertions)",
+    )
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    bench_kernels()
-    bench_scaling()
-    bench_blocksize()
-    bench_spectral()
-    bench_pipeline()
-    bench_lm_smoke()
+    for name, fn in _BENCHES.items():
+        if args.only and name not in args.only:
+            continue
+        fn()
 
 
 if __name__ == "__main__":

@@ -126,8 +126,15 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         steps = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and ".tmp" not in name:
-                steps.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or ".tmp" in name:
+                continue
+            # the FULL suffix must be numeric: a stray "step_foo" or a
+            # manual "step_0000000003_backup" copy must neither kill the
+            # resume scan (ValueError) nor alias a real step number
+            suffix = name[len("step_"):]
+            if not suffix.isdigit():
+                continue
+            steps.append(int(suffix))
         return sorted(steps)
 
     def latest_step(self) -> int | None:
@@ -145,14 +152,13 @@ class CheckpointManager:
         stage-boundary restore path: artifacts are a flat namespace, so no
         pytree prototype is required to resume."""
         path = os.path.join(self.directory, f"step_{step:010d}")
-        data = np.load(os.path.join(path, "arrays.npz"))
-        return {k: data[k] for k in data.files}
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            return {k: data[k] for k in data.files}
 
     def restore(self, step: int, target: Tree, *, shardings: Tree | None = None):
         """target: pytree prototype (structure + dtypes).  shardings: optional
         matching tree of Shardings - this is the elastic-resharding hook."""
         path = os.path.join(self.directory, f"step_{step:010d}")
-        data = np.load(os.path.join(path, "arrays.npz"))
         flat_proto, treedef = jax.tree_util.tree_flatten_with_path(target)
         flat_shard = (
             [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
@@ -160,13 +166,14 @@ class CheckpointManager:
             else [None] * len(flat_proto)
         )
         leaves = []
-        for (path_, proto), shard in zip(flat_proto, flat_shard):
-            key = _SEP.join(
-                str(getattr(p, "key", getattr(p, "idx", p))) for p in path_
-            )
-            arr = data[key]
-            if shard is not None:
-                leaves.append(jax.device_put(arr, shard))
-            else:
-                leaves.append(jax.numpy.asarray(arr, dtype=proto.dtype))
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for (path_, proto), shard in zip(flat_proto, flat_shard):
+                key = _SEP.join(
+                    str(getattr(p, "key", getattr(p, "idx", p))) for p in path_
+                )
+                arr = data[key]
+                if shard is not None:
+                    leaves.append(jax.device_put(arr, shard))
+                else:
+                    leaves.append(jax.numpy.asarray(arr, dtype=proto.dtype))
         return treedef.unflatten(leaves)

@@ -44,12 +44,19 @@ from repro.sharding.logical import folded_axis_index, mesh_axis_size
 
 
 @functools.partial(jax.jit, static_argnames=("block", "mode"))
-def apsp_blocked(g: jax.Array, *, block: int = 512, mode: str = "auto"):
-    """Single-device blocked Floyd-Warshall. g: (n, n), inf = no edge."""
+def apsp_blocked_segment(
+    g: jax.Array, lo, hi, *, block: int = 512, mode: str = "auto"
+):
+    """Run diagonal iterations [lo, hi) of single-device blocked
+    Floyd-Warshall on `g` (the evolving (n, n) matrix, inf = no edge).
+
+    Segment execution is the fault-tolerance unit: the pipeline engine
+    checkpoints `g` between segments and a resumed run re-enters at the
+    recorded iteration.  lo/hi may be traced (jnp.int32) so one compiled
+    executable serves every segment."""
     n = g.shape[0]
     block = min(block, n)
     assert n % block == 0, (n, block)
-    q = n // block
 
     def iteration(i, g):
         off = i * block
@@ -62,7 +69,16 @@ def apsp_blocked(g: jax.Array, *, block: int = 512, mode: str = "auto"):
         # Phase 3 fused: min(G, C (x) R) without the (n, n) intermediate
         return ops.minplus_update(g, c, r, mode=mode)
 
-    return jax.lax.fori_loop(0, q, iteration, g)
+    return jax.lax.fori_loop(lo, hi, iteration, g)
+
+
+def apsp_blocked(g: jax.Array, *, block: int = 512, mode: str = "auto"):
+    """Single-device blocked Floyd-Warshall. g: (n, n), inf = no edge."""
+    n = g.shape[0]
+    q = n // min(block, n)
+    return apsp_blocked_segment(
+        g, jnp.int32(0), jnp.int32(q), block=block, mode=mode
+    )
 
 
 # ------------------------------------------------------------- sharded ----
@@ -177,6 +193,26 @@ def make_apsp_segment(
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_apsp_segment(
+    mesh: Mesh,
+    *,
+    n: int,
+    b: int,
+    data_axis: str = "data",
+    model_axis: str = "model",
+    mode: str = "auto",
+    split_panels: bool = False,
+):
+    """:func:`make_apsp_segment` memoized per (mesh, n, b, ...) so the
+    pipeline engine can request the segment fn once per segment without
+    rebuilding (and re-jitting) the shard_map each time."""
+    return make_apsp_segment(
+        mesh, n=n, b=b, data_axis=data_axis, model_axis=model_axis,
+        mode=mode, split_panels=split_panels,
+    )
 
 
 def apsp_sharded(

@@ -1,0 +1,183 @@
+"""Artifact lifecycle: the placement-aware, liveness-pruned store behind
+:class:`~repro.core.pipeline.ManifoldPipeline`.
+
+The pipeline used to thread a flat ``{name: array}`` dict through the
+stage chain and checkpoint the whole cumulative namespace at every stage
+boundary - by the ``eigen`` stage that is ~4 live (n, n) arrays (graph,
+geodesics_raw, geodesics, gram) in memory *and* on disk.  megaman's
+lesson is that discipline on exactly these O(n^2) intermediates decides
+the largest n that fits; this module supplies that discipline as data,
+not convention:
+
+* every artifact is an :class:`ArtifactRecord` carrying its **producer**
+  (the stage that made it), its **placement** (a mesh-role partition
+  spec, or None for host/single-device arrays), and its value;
+* **liveness** is derived, never declared ad hoc: after stage i the live
+  set is ``{"x"} | exports | union(requires of stages[i+1:])`` (plus the
+  ``segment_requires`` of resumable stages still to run) - everything
+  else is dropped the moment its last consumer has run, so peak residency
+  and checkpoint payloads are O(n^2), not O(stages * n^2);
+* **placement** makes restore elastic: specs are recorded in *mesh
+  roles* ("data"/"model"), so a checkpoint written on a 4x2 mesh can be
+  ``device_put`` straight onto a 2x4 (or renamed-axis) mesh by whatever
+  backend performs the restore.
+
+The store is a read-only :class:`~collections.abc.Mapping` from the
+stages' point of view (``art["graph"]`` works unchanged); only the
+engine mutates it via :meth:`ArtifactStore.put` / :meth:`ArtifactStore.prune`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Mapping
+from typing import Any, Iterator
+
+# Canonical mesh-role names used in recorded placements.  Backends map
+# their actual axis names onto these at save time and back at restore
+# time, so elastic restart survives axis renames as well as reshapes.
+DATA_ROLE = "data"
+MODEL_ROLE = "model"
+
+# Reserved flat-key prefix for mid-stage (segment) state in checkpoints.
+SEGMENT_STATE_KEY = "_segstate"
+
+
+@dataclasses.dataclass
+class ArtifactRecord:
+    """One artifact: its value plus the lifecycle metadata the engine
+    needs to prune, checkpoint, and elastically restore it."""
+
+    value: Any
+    producer: str                  # stage name, or "input"/"checkpoint"
+    placement: list | None = None  # mesh-role partition spec (JSON-ready)
+
+
+class ArtifactStore(Mapping):
+    """Mapping-compatible artifact namespace with lifecycle metadata.
+
+    Reads (``store[name]``, ``in``, ``.keys()``/``.items()``) see plain
+    values, so stage ``run()`` bodies and downstream consumers
+    (StreamingMapper, result adapters, tests) are oblivious to the
+    lifecycle machinery.  ``exports`` is stamped by the pipeline before
+    the store is handed back from ``run()``.
+    """
+
+    def __init__(self) -> None:
+        self._records: dict[str, ArtifactRecord] = {}
+        self.exports: tuple[str, ...] = ()
+
+    # ------------------------------------------------------ Mapping API --
+
+    def __getitem__(self, name: str) -> Any:
+        return self._records[name].value
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._records)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            "ArtifactStore("
+            + ", ".join(
+                f"{k}<-{r.producer}" for k, r in self._records.items()
+            )
+            + ")"
+        )
+
+    # ----------------------------------------------------- engine writes --
+
+    def put(
+        self,
+        name: str,
+        value: Any,
+        *,
+        producer: str,
+        placement: list | None = None,
+    ) -> None:
+        self._records[name] = ArtifactRecord(
+            value=value, producer=producer, placement=placement
+        )
+
+    def prune(self, live: set[str]) -> list[str]:
+        """Drop every artifact not in `live`; returns the dropped names."""
+        dropped = [k for k in self._records if k not in live]
+        for k in dropped:
+            del self._records[k]
+        return dropped
+
+    # -------------------------------------------------------- metadata ----
+
+    def record(self, name: str) -> ArtifactRecord:
+        return self._records[name]
+
+    def producers(self) -> dict[str, str]:
+        return {k: r.producer for k, r in self._records.items()}
+
+    def placements(self) -> dict[str, list | None]:
+        return {k: r.placement for k, r in self._records.items()}
+
+
+# ------------------------------------------------- placement spec codec ----
+
+
+def _canon_axis(axis: str, data_axis: str, model_axis: str) -> str:
+    if axis == data_axis:
+        return DATA_ROLE
+    if axis == model_axis:
+        return MODEL_ROLE
+    return axis
+
+
+def _concrete_axis(role: str, data_axis: str, model_axis: str) -> str:
+    if role == DATA_ROLE:
+        return data_axis
+    if role == MODEL_ROLE:
+        return model_axis
+    return role
+
+
+def spec_to_placement(sharding, data_axis: str, model_axis: str):
+    """NamedSharding -> JSON-ready placement in mesh roles, or None.
+
+    None means "no recorded placement" (host array, single-device array,
+    or a sharding without a named spec); an empty list is a *replicated*
+    mesh placement - the distinction matters at restore time (replicated
+    state is device_put onto every device of the new mesh).
+    """
+    spec = getattr(sharding, "spec", None)
+    if spec is None or getattr(sharding, "mesh", None) is None:
+        return None
+    out: list = []
+    for dim in spec:
+        if dim is None:
+            out.append(None)
+        elif isinstance(dim, (tuple, list)):
+            out.append(
+                [_canon_axis(a, data_axis, model_axis) for a in dim]
+            )
+        else:
+            out.append(_canon_axis(dim, data_axis, model_axis))
+    # drop trailing Nones: P(None, None) == P()
+    while out and out[-1] is None:
+        out.pop()
+    return out
+
+
+def placement_to_spec(placement, data_axis: str, model_axis: str):
+    """JSON placement (mesh roles) -> PartitionSpec with concrete axis
+    names for the *restoring* mesh."""
+    from jax.sharding import PartitionSpec
+
+    dims = []
+    for dim in placement:
+        if dim is None:
+            dims.append(None)
+        elif isinstance(dim, (tuple, list)):
+            dims.append(
+                tuple(_concrete_axis(a, data_axis, model_axis) for a in dim)
+            )
+        else:
+            dims.append(_concrete_axis(dim, data_axis, model_axis))
+    return PartitionSpec(*dims)

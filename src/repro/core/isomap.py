@@ -14,7 +14,10 @@ reuses the pipeline's kNN + graph stages and swaps the O(n^3) APSP tail
 for m landmark Bellman-Ford rows + landmark MDS + triangulation.  The
 landmark tail itself is backend-dispatched: :func:`landmark_tail_local`
 on one device, :func:`landmark_tail_sharded` (Bellman-Ford rows relaxed
-against the tile-sharded graph under ``shard_map``) on a mesh.
+against the tile-sharded graph under ``shard_map``) on a mesh.  Under the
+pipeline engine the tail runs as a :class:`ResumableStage` - relaxation
+sweeps are engine-owned segments, so the m x n landmark panel checkpoints
+mid-sweep on big graphs exactly like APSP's diagonal panels.
 """
 from __future__ import annotations
 
@@ -158,51 +161,103 @@ def _landmark_mds(dl: jax.Array, *, m: int, d: int):
     return y, l_emb
 
 
-@functools.partial(jax.jit, static_argnames=("m", "d", "mode", "sweeps"))
+@functools.partial(jax.jit, static_argnames=("m",))
+def landmark_init_local(g: jax.Array, m: int) -> jax.Array:
+    """Initial landmark rows: direct edges from the first m points
+    (deterministic landmark choice; callers may permute x)."""
+    return g[:m, :]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def landmark_sweep_local(
+    dl: jax.Array, g: jax.Array, sweeps, *, mode: str
+):
+    """Run `sweeps` Bellman-Ford relaxation sweeps of the (m, n) landmark
+    rows against the graph.  Each sweep extends paths by one kNN-graph
+    hop batch; min-plus is exact in fp, so any segmentation of the sweep
+    count produces bit-identical rows.  `sweeps` may be traced (jnp.int32)
+    so one executable serves every segment length."""
+
+    def relax(_, dl):
+        return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
+
+    return jax.lax.fori_loop(0, sweeps, relax, dl)
+
+
+def landmark_finalize(dl: jax.Array, *, m: int, d: int):
+    """Clamp the converged landmark rows and run landmark MDS +
+    triangulation (replicated O(m^2 d + n m d) compute on any backend)."""
+    return _landmark_mds(clamp_disconnected(dl), m=m, d=d)
+
+
 def landmark_tail_local(
     g: jax.Array, *, m: int, d: int, mode: str, sweeps: int = 32
 ):
     """Landmark geodesics + landmark MDS + triangulation on a built graph.
 
-    landmarks = first m points (deterministic; callers may permute x).
-    Bellman-Ford sweeps: each sweep extends paths by one kNN-graph hop
-    batch; 32 sweeps covers the hop diameters of the benchmark graphs
-    (validated in tests via fixed-point check).
+    32 sweeps covers the hop diameters of the benchmark graphs (validated
+    in tests via fixed-point check).  Composed from the segment primitives
+    the pipeline engine checkpoints between (init / sweep / finalize).
     """
-    dl = g[:m, :]  # (m, n) initial: direct edges from landmarks
-
-    def relax(_, dl):
-        return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
-
-    dl = jax.lax.fori_loop(0, sweeps, relax, dl)
-    dl = clamp_disconnected(dl)
-    return _landmark_mds(dl, m=m, d=d)
+    dl = landmark_init_local(g, m)
+    dl = landmark_sweep_local(dl, g, jnp.int32(sweeps), mode=mode)
+    return landmark_finalize(dl, m=m, d=d)
 
 
 @functools.lru_cache(maxsize=None)
-def _make_landmark_bf_sharded(
-    mesh, n, m, sweeps, mode, data_axis, model_axis
+def make_landmark_init_sharded(
+    mesh, n, m, *, data_axis="data", model_axis="model"
 ):
-    """Build the jit'd shard_map running the m Bellman-Ford landmark rows
-    against the tile-sharded graph; returns a replicated (m, n) dl."""
+    """Build the jit'd shard_map extracting the initial (m, n) landmark
+    rows from the tile-sharded graph, replicated on every device: each
+    data shard contributes the rows it owns, a masked psum + model gather
+    complete the panel."""
     from repro.sharding.logical import folded_axis_index, mesh_axis_size
 
     pd = mesh_axis_size(mesh, data_axis)
     pm = mesh_axis_size(mesh, model_axis)
     if n % pd or n % pm:
         raise ValueError(f"n {n} must divide the mesh axes ({pd}, {pm})")
-    nr, nc = n // pd, n // pm
+    nr = n // pd
 
     def shard_fn(g_loc):
         di = folded_axis_index(data_axis)
-        # dl = g[:m, :]: each data shard contributes the landmark rows it
-        # owns, a masked psum + model gather replicate the (m, n) panel
         row_ids = jnp.arange(m)
         owner = row_ids // nr
         local = jnp.clip(row_ids - di * nr, 0, nr - 1)
         sl = jnp.where((owner == di)[:, None], g_loc[local], 0.0)  # (m, nc)
         dl_cols = jax.lax.psum(sl, data_axis)
-        dl = jax.lax.all_gather(dl_cols, model_axis, axis=1, tiled=True)
+        return jax.lax.all_gather(dl_cols, model_axis, axis=1, tiled=True)
+
+    fn = compat.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=P(data_axis, model_axis),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def make_landmark_sweep_sharded(
+    mesh, n, m, mode, *, data_axis="data", model_axis="model"
+):
+    """Build the jit'd shard_map running Bellman-Ford relaxation sweeps
+    of the replicated (m, n) landmark rows against the tile-sharded
+    graph.  The sweep count is a traced argument, so the pipeline engine
+    can run any segment of the sweep loop (and checkpoint dl between
+    segments) through one compiled executable."""
+    from repro.sharding.logical import folded_axis_index, mesh_axis_size
+
+    pd = mesh_axis_size(mesh, data_axis)
+    pm = mesh_axis_size(mesh, model_axis)
+    if n % pd or n % pm:
+        raise ValueError(f"n {n} must divide the mesh axes ({pd}, {pm})")
+    nr = n // pd
+
+    def shard_fn(g_loc, dl, sweeps):
+        di = folded_axis_index(data_axis)
 
         def relax(_, dl):
             # per-device partial min over its row chunk of the contraction
@@ -219,7 +274,7 @@ def _make_landmark_bf_sharded(
     fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=P(data_axis, model_axis),
+        in_specs=(P(data_axis, model_axis), P(), P()),
         out_specs=P(),
         check_vma=False,
     )
@@ -241,27 +296,62 @@ def landmark_tail_sharded(
     data axis (per-device work and graph residency are 1/p of local); the
     O(m^2) landmark MDS then runs replicated, same as the spectral stage's
     redundant QR - centralization would cost more than it saves."""
-    bf = _make_landmark_bf_sharded(
-        mesh, g.shape[0], m, sweeps, mode, data_axis, model_axis
-    )
-    dl = clamp_disconnected(bf(g))
-    return _landmark_mds(dl, m=m, d=d)
+    n = g.shape[0]
+    dl = make_landmark_init_sharded(
+        mesh, n, m, data_axis=data_axis, model_axis=model_axis
+    )(g)
+    dl = make_landmark_sweep_sharded(
+        mesh, n, m, mode, data_axis=data_axis, model_axis=model_axis
+    )(g, dl, jnp.int32(sweeps))
+    return landmark_finalize(dl, m=m, d=d)
 
 
 class LandmarkStage:
     """Pipeline tail replacing apsp/clamp/center/eigen for L-Isomap.
+
+    A ResumableStage: units are Bellman-Ford relaxation sweeps, state is
+    the (m, n) landmark-row panel, so the m x n landmark tail can
+    checkpoint mid-sweep on big graphs.  `segment_requires` keeps the
+    graph in mid-sweep checkpoints - unlike APSP, every sweep relaxes
+    against the original graph, so state alone cannot continue the stage.
     Dispatches through the context's backend like every other stage."""
 
     name = "landmark"
     requires = ("graph",)
     provides = ("embedding", "landmark_embedding")
+    exports = ("embedding", "landmark_embedding")
+    segment_requires = ("graph",)
+    # resume identity: a checkpoint written with a different landmark
+    # count or sweep budget must not be adopted (`segment` is NOT part of
+    # identity - resuming with a different segmentation is elastic)
+    params = ("m", "sweeps")
 
-    def __init__(self, m: int):
+    def __init__(self, m: int, *, sweeps: int = 32, segment: int | None = None):
         self.m = m
+        self.sweeps = sweeps
+        self.segment = segment
+
+    def num_units(self, ctx, art):
+        return self.sweeps
+
+    def init_state(self, ctx, art):
+        return {"dl": ctx.backend.landmark_init(ctx.cfg, art["graph"], self.m)}
+
+    def run_segment(self, ctx, art, state, lo, hi):
+        dl = ctx.backend.landmark_sweep(
+            ctx.cfg, art["graph"], state["dl"], lo, hi
+        )
+        return {"dl": dl}
+
+    def finalize(self, ctx, art, state):
+        y, l_emb = ctx.backend.landmark_finalize(ctx.cfg, state["dl"], self.m)
+        return {"embedding": y, "landmark_embedding": l_emb}
 
     def run(self, ctx, art):
-        y, l_emb = ctx.backend.landmark_tail(ctx.cfg, art["graph"], self.m)
-        return {"embedding": y, "landmark_embedding": l_emb}
+        """Unsegmented fallback (direct use outside the engine)."""
+        state = self.init_state(ctx, art)
+        state = self.run_segment(ctx, art, state, 0, self.num_units(ctx, art))
+        return self.finalize(ctx, art, state)
 
 
 def landmark_isomap(

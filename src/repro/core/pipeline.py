@@ -16,30 +16,48 @@ first-class object.  Stage -> paper mapping:
   ``eigen``   steps 4-5, (Q_d, Delta_d) and Y = Q_d Delta_d^{1/2}
   ==========  =====================================================
 
-Architecture
-------------
-A :class:`Stage` consumes and produces named **artifacts** (a flat
-``{name: array}`` namespace).  :class:`ManifoldPipeline` executes a stage
-list over a :class:`LocalBackend` or :class:`MeshBackend` - single-device
-and mesh-sharded execution are two backends of ONE pipeline rather than
-parallel hand-wired codepaths.  Each stage boundary is a checkpoint/resume
-point (``checkpoint=CheckpointManager(...)``, ``resume=True``): the
-artifacts produced so far are persisted with the stage name in the
-manifest, and a restarted pipeline skips every completed stage.  Persisted
-artifacts are also reusable state in their own right - the streaming
-mapper (:class:`repro.core.streaming.StreamingMapper`) serves new-point
-queries straight from a fitted pipeline's ``geodesics`` + ``embedding``
-artifacts (Schoeneman et al.'s stream/batch combination point).
+Artifact-lifecycle architecture
+-------------------------------
+A :class:`Stage` consumes ``requires`` artifacts and produces ``provides``
+artifacts, executed by :class:`ManifoldPipeline` over a
+:class:`LocalBackend` or :class:`MeshBackend` (single-device and
+mesh-sharded are two backends of ONE pipeline, not parallel codepaths).
+Artifacts live in an :class:`~repro.core.artifacts.ArtifactStore`, which
+tracks three things per artifact and is the engine's unit of memory and
+fault-tolerance discipline:
 
-The backend protocol covers the approximate/streaming tail too: both
-backends implement ``landmark_tail`` (the L-Isomap Bellman-Ford rows +
-landmark MDS) and ``map_new_points`` (the streaming anchor relaxation), so
-:class:`~repro.core.isomap.LandmarkStage` and the streaming mapper are
-backend-agnostic like every other stage - on the mesh the landmark rows
-and the anchor relaxation are sharded over the data axis via ``shard_map``.
-In front of the mapper, :mod:`repro.launch.serving` provides the
-request/response surface: a batched arrival queue with max-batch-size /
-max-batch-latency scheduling that drains into the mapper on either backend.
+* **producer + liveness** - after stage i, the live set is
+  ``{"x"} | exports | union(requires of the remaining stages)``.
+  ``exports`` (per-stage ``exports`` declarations, overridable per
+  pipeline) name the artifacts that outlive the run - the fitted
+  serving state (``geodesics``, ``embedding``, eigen outputs).
+  Consumed intermediates (``graph``, ``geodesics_raw``, ``gram``,
+  kNN lists) are dropped the moment their last consumer has run, so
+  both peak residency and every checkpoint payload are O(n^2), not
+  O(stages * n^2).
+* **placement** - where the artifact lives on the backend, recorded in
+  mesh *roles* ("data"/"model") rather than concrete axis names.  The
+  stage-boundary checkpoints persist only the live set plus placements;
+  ``run(resume=True)`` restores by ``device_put``-ing each artifact
+  straight onto the *current* backend's mesh - elastic restart onto a
+  different mesh shape (4x2 -> 2x4, test-proven) or from a local fit
+  onto a mesh is "load + place", no resharding codepath per stage.
+* **segments** - a :class:`ResumableStage` additionally exposes its
+  inner loop as engine-owned segments (``num_units`` /
+  ``init_state`` / ``run_segment`` / ``finalize``).  The engine runs
+  the segments, checkpoints the segment state + a progress manifest
+  between them (the paper's every-K-iterations lineage checkpoint),
+  and on resume re-enters *mid-stage* at the recorded unit.  Both
+  the blocked-Floyd-Warshall ``apsp`` stage (units = diagonal
+  panels) and the landmark Bellman-Ford tail (units = relaxation
+  sweeps) execute this way on both backends.
+
+Persisted artifacts are reusable state in their own right - the streaming
+mapper (:class:`repro.core.streaming.StreamingMapper`) serves new-point
+queries straight from a fitted pipeline's exported ``geodesics`` +
+``embedding`` artifacts (Schoeneman et al.'s stream/batch combination
+point), and :mod:`repro.launch.serving` provides the batched
+request/response surface in front of it.
 
 LLE registers its own tail stages (``lle_weights``, ``lle_eigen``) behind
 the shared ``knn`` stage - the paper's "extends to other spectral methods
@@ -56,9 +74,21 @@ import jax.numpy as jnp
 
 from repro.core import apsp as apsp_mod
 from repro.core import centering, graph, knn as knn_mod, spectral
+from repro.core.artifacts import (
+    SEGMENT_STATE_KEY,
+    ArtifactStore,
+    placement_to_spec,
+    spec_to_placement,
+)
 from repro.core.postprocess import clamp_disconnected, embedding_from_eig
 
 Artifacts = dict[str, Any]
+
+# Step numbering: stage-boundary checkpoints land at (i+1)*_STEP_STRIDE,
+# mid-stage segment checkpoints of stage i at i*_STEP_STRIDE + unit - so
+# steps sort by pipeline progress and a directory listing interleaves
+# boundary and partial checkpoints correctly.
+_STEP_STRIDE = 1_000_000
 
 
 @dataclasses.dataclass
@@ -78,9 +108,16 @@ class PipelineConfig:
 
 
 class LocalBackend:
-    """Single-device execution of the primitive stage ops."""
+    """Single-device execution of the primitive stage ops.
+
+    segment: optional unit count per segment for ResumableStages (None =
+    run each stage's inner loop in one shot); mirrors MeshBackend.
+    """
 
     kind = "local"
+
+    def __init__(self, *, segment: int | None = None):
+        self.segment = segment
 
     def knn(self, cfg: PipelineConfig, x):
         n = x.shape[0]
@@ -90,12 +127,6 @@ class LocalBackend:
 
     def graph(self, cfg: PipelineConfig, dists, idx, n: int):
         return graph.knn_to_graph(dists, idx, n=n)
-
-    def apsp(self, cfg: PipelineConfig, g):
-        n = g.shape[0]
-        return apsp_mod.apsp_blocked(
-            g, block=min(cfg.block, n), mode=cfg.kernel_mode
-        )
 
     def clamp(self, cfg: PipelineConfig, a):
         return jax.jit(clamp_disconnected)(a)
@@ -108,10 +139,38 @@ class LocalBackend:
             b, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
         )
 
-    def landmark_tail(self, cfg: PipelineConfig, g, m: int):
-        from repro.core.isomap import landmark_tail_local
+    # --- segmented APSP (ResumableStage hooks) ---
 
-        return landmark_tail_local(g, m=m, d=cfg.d, mode=cfg.kernel_mode)
+    def apsp_num_units(self, cfg: PipelineConfig, n: int) -> int:
+        return n // min(cfg.block, n)
+
+    def apsp_segment(self, cfg: PipelineConfig, g, lo: int, hi: int):
+        n = g.shape[0]
+        return apsp_mod.apsp_blocked_segment(
+            g, jnp.int32(lo), jnp.int32(hi),
+            block=min(cfg.block, n), mode=cfg.kernel_mode,
+        )
+
+    # --- segmented landmark Bellman-Ford tail ---
+
+    def landmark_init(self, cfg: PipelineConfig, g, m: int):
+        from repro.core.isomap import landmark_init_local
+
+        return landmark_init_local(g, m)
+
+    def landmark_sweep(self, cfg: PipelineConfig, g, dl, lo: int, hi: int):
+        from repro.core.isomap import landmark_sweep_local
+
+        return landmark_sweep_local(
+            dl, g, jnp.int32(hi - lo), mode=cfg.kernel_mode
+        )
+
+    def landmark_finalize(self, cfg: PipelineConfig, dl, m: int):
+        from repro.core.isomap import landmark_finalize as _fin
+
+        return _fin(dl, m=m, d=cfg.d)
+
+    # --- streaming tail ---
 
     def row_mean_sq(self, geodesics):
         from repro.core.streaming import geodesic_row_mean_sq
@@ -127,13 +186,23 @@ class LocalBackend:
             x_new, x_base, geodesics, embedding, k=k, mean_sq=mean_sq
         )
 
+    # --- artifact placement (trivial on one device) ---
+
+    def placement_of(self, value):
+        return None
+
+    def place(self, value, placement):
+        return jnp.asarray(value)
+
 
 class MeshBackend:
     """Mesh-sharded execution: same stage chain, explicit collectives.
 
-    checkpoint_cb/segment feed the *intra-stage* APSP panel checkpoints
-    (the paper's every-K-iterations lineage checkpoint); the *inter-stage*
-    resume points are owned by :class:`ManifoldPipeline`.
+    segment sizes the engine-owned intra-stage checkpoints of
+    ResumableStages (APSP panels, landmark sweeps - the paper's
+    every-K-iterations lineage checkpoint); checkpoint_cb is the legacy
+    per-APSP-segment hook (called with the evolving sharded matrix).
+    The *inter-stage* resume points are owned by :class:`ManifoldPipeline`.
     """
 
     kind = "sharded"
@@ -172,13 +241,6 @@ class MeshBackend:
             out_shardings=self.tile_spec,
         )(dists, idx)
 
-    def apsp(self, cfg: PipelineConfig, g):
-        return apsp_mod.apsp_sharded(
-            g, self.mesh, b=cfg.block, segment=self.segment,
-            checkpoint_cb=self.checkpoint_cb, mode=cfg.kernel_mode,
-            data_axis=self.data_axis, model_axis=self.model_axis,
-        )
-
     def clamp(self, cfg: PipelineConfig, a):
         return jax.jit(clamp_disconnected, out_shardings=self.tile_spec)(a)
 
@@ -197,13 +259,49 @@ class MeshBackend:
         )
         return eig_fn(b)
 
-    def landmark_tail(self, cfg: PipelineConfig, g, m: int):
-        from repro.core.isomap import landmark_tail_sharded
+    # --- segmented APSP (ResumableStage hooks) ---
 
-        return landmark_tail_sharded(
-            g, self.mesh, m=m, d=cfg.d, mode=cfg.kernel_mode,
+    def apsp_num_units(self, cfg: PipelineConfig, n: int) -> int:
+        # clamp like LocalBackend: block > n must not yield 0 units (the
+        # engine would silently skip APSP); make_apsp_segment still
+        # asserts the block fits the local tile
+        return n // min(cfg.block, n)
+
+    def apsp_segment(self, cfg: PipelineConfig, g, lo: int, hi: int):
+        n = g.shape[0]
+        seg_fn = apsp_mod.cached_apsp_segment(
+            self.mesh, n=n, b=min(cfg.block, n),
+            data_axis=self.data_axis, model_axis=self.model_axis,
+            mode=cfg.kernel_mode,
+        )
+        return seg_fn(g, jnp.int32(lo), jnp.int32(hi))
+
+    # --- segmented landmark Bellman-Ford tail ---
+
+    def landmark_init(self, cfg: PipelineConfig, g, m: int):
+        from repro.core.isomap import make_landmark_init_sharded
+
+        fn = make_landmark_init_sharded(
+            self.mesh, g.shape[0], m,
             data_axis=self.data_axis, model_axis=self.model_axis,
         )
+        return fn(g)
+
+    def landmark_sweep(self, cfg: PipelineConfig, g, dl, lo: int, hi: int):
+        from repro.core.isomap import make_landmark_sweep_sharded
+
+        fn = make_landmark_sweep_sharded(
+            self.mesh, g.shape[0], dl.shape[0], cfg.kernel_mode,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+        return fn(g, dl, jnp.int32(hi - lo))
+
+    def landmark_finalize(self, cfg: PipelineConfig, dl, m: int):
+        from repro.core.isomap import landmark_finalize as _fin
+
+        return _fin(dl, m=m, d=cfg.d)
+
+    # --- streaming tail ---
 
     def row_mean_sq(self, geodesics):
         from repro.core.streaming import _make_row_mean_sq_sharded
@@ -223,6 +321,27 @@ class MeshBackend:
             mean_sq=mean_sq,
         )
 
+    # --- artifact placement (the elastic-restart hooks) ---
+
+    def placement_of(self, value):
+        """Record the artifact's partition spec in mesh roles, or None
+        for host / single-device / unspecced values."""
+        sharding = getattr(value, "sharding", None)
+        if sharding is None:
+            return None
+        return spec_to_placement(sharding, self.data_axis, self.model_axis)
+
+    def place(self, value, placement):
+        """device_put a restored host array onto THIS mesh according to
+        its recorded placement - the mesh it was saved from may have had
+        a different shape (or axis names) entirely."""
+        from jax.sharding import NamedSharding
+
+        if placement is None:
+            return jnp.asarray(value)
+        spec = placement_to_spec(placement, self.data_axis, self.model_axis)
+        return jax.device_put(value, NamedSharding(self.mesh, spec))
+
 
 # -------------------------------------------------------------- stages ----
 
@@ -231,13 +350,70 @@ class MeshBackend:
 class Stage(Protocol):
     """One named unit of the pipeline: consumes `requires` artifacts,
     produces `provides` artifacts.  Implementations dispatch through the
-    context's backend so the same stage object runs locally or sharded."""
+    context's backend so the same stage object runs locally or sharded.
+
+    Optional class attributes understood by the engine:
+
+    * ``exports`` - the subset of `provides` that outlives the run (kept
+      live, persisted at every later boundary) even once all downstream
+      consumers have run.
+    * ``params`` - names of constructor attributes that are part of the
+      stage's *identity* for resume compatibility (e.g. LandmarkStage's
+      ``m``/``sweeps``): a checkpoint written with different values must
+      not be adopted, exactly like a PipelineConfig mismatch.
+    """
 
     name: str
     requires: tuple[str, ...]
     provides: tuple[str, ...]
 
     def run(self, ctx: "PipelineContext", art: Artifacts) -> Artifacts: ...
+
+
+@runtime_checkable
+class ResumableStage(Protocol):
+    """A stage whose inner loop is exposed as engine-owned segments.
+
+    The engine calls ``init_state`` once, then ``run_segment`` over unit
+    ranges [lo, hi), checkpointing the returned state dict (plus a
+    progress manifest: stage, unit reached, total units) between
+    segments; ``finalize`` turns the final state into the stage's
+    `provides`.  ``segment_requires`` names the artifacts ``run_segment``
+    still reads every segment - only those (not the full `requires`) are
+    persisted with mid-stage checkpoints, so a stage whose state subsumes
+    its input (APSP: the evolving matrix) checkpoints one O(n^2) array,
+    not two.
+    """
+
+    name: str
+    requires: tuple[str, ...]
+    provides: tuple[str, ...]
+    segment_requires: tuple[str, ...]
+
+    def num_units(self, ctx: "PipelineContext", art: Artifacts) -> int: ...
+
+    def init_state(
+        self, ctx: "PipelineContext", art: Artifacts
+    ) -> dict[str, Any]: ...
+
+    def run_segment(
+        self, ctx: "PipelineContext", art: Artifacts,
+        state: dict[str, Any], lo: int, hi: int,
+    ) -> dict[str, Any]: ...
+
+    def finalize(
+        self, ctx: "PipelineContext", art: Artifacts, state: dict[str, Any]
+    ) -> Artifacts: ...
+
+
+def _is_resumable(stage) -> bool:
+    return callable(getattr(stage, "run_segment", None))
+
+
+def _stage_fingerprint(stage) -> dict:
+    """Identity-relevant stage attributes (declared via ``params``) for
+    resume compatibility, JSON-safe."""
+    return {p: getattr(stage, p) for p in getattr(stage, "params", ())}
 
 
 @dataclasses.dataclass
@@ -269,18 +445,49 @@ class GraphStage:
 
 
 class APSPStage:
+    """Blocked Floyd-Warshall as a ResumableStage: units are diagonal
+    panels, state is the evolving distance matrix (which subsumes the
+    input graph - min-plus updates only ever tighten it), so mid-stage
+    checkpoints persist exactly one O(n^2) array."""
+
     name = "apsp"
     requires = ("graph",)
     provides = ("geodesics_raw",)
+    segment_requires = ()
+
+    def num_units(self, ctx, art):
+        # derived from x, not the graph: a mid-stage resume has already
+        # dropped the graph (the evolving state subsumes it)
+        return ctx.backend.apsp_num_units(ctx.cfg, art["x"].shape[0])
+
+    def init_state(self, ctx, art):
+        return {"g": art["graph"]}
+
+    def run_segment(self, ctx, art, state, lo, hi):
+        g = ctx.backend.apsp_segment(ctx.cfg, state["g"], lo, hi)
+        cb = getattr(ctx.backend, "checkpoint_cb", None)
+        if cb is not None:
+            cb(g, hi)
+        return {"g": g}
+
+    def finalize(self, ctx, art, state):
+        return {"geodesics_raw": state["g"]}
 
     def run(self, ctx, art):
-        return {"geodesics_raw": ctx.backend.apsp(ctx.cfg, art["graph"])}
+        """Unsegmented fallback (direct use outside the engine)."""
+        state = self.init_state(ctx, art)
+        total = self.num_units(ctx, art)
+        state = self.run_segment(ctx, art, state, 0, total)
+        return self.finalize(ctx, art, state)
 
 
 class ClampStage:
     name = "clamp"
     requires = ("geodesics_raw",)
     provides = ("geodesics",)
+    # geodesics are serving state (StreamingMapper reattaches to them),
+    # so they outlive their last in-pipeline consumer (center)
+    exports = ("geodesics",)
 
     def run(self, ctx, art):
         return {"geodesics": ctx.backend.clamp(ctx.cfg, art["geodesics_raw"])}
@@ -301,6 +508,7 @@ class EigenStage:
     provides = (
         "eigenvectors", "eigenvalues", "iterations", "delta", "embedding",
     )
+    exports = ("embedding", "eigenvalues", "iterations")
 
     def run(self, ctx, art):
         eig = ctx.backend.eigen(ctx.cfg, art["gram"])
@@ -339,6 +547,7 @@ class LLEEigenStage:
     name = "lle_eigen"
     requires = ("lle_m",)
     provides = ("embedding",)
+    exports = ("embedding",)
 
     def run(self, ctx, art):
         from repro.core.lle import lle_bottom_eigen
@@ -373,17 +582,40 @@ def _same_input(x_saved, x) -> bool:
     return bool(np.array_equal(x_saved, np.asarray(x, dtype=x_saved.dtype)))
 
 
+@dataclasses.dataclass
+class _ResumePoint:
+    """What the resume scan found: the first stage index to (re-)enter,
+    the restored host artifacts + their lifecycle metadata, and - for a
+    mid-stage re-entry - the segment state and the unit to continue at."""
+
+    start: int
+    artifacts: dict | None = None
+    placements: dict = dataclasses.field(default_factory=dict)
+    producers: dict = dataclasses.field(default_factory=dict)
+    seg_state: dict | None = None
+    seg_lo: int = 0
+
+
 class ManifoldPipeline:
-    """Executes a stage list over one backend, checkpointing at stage
-    boundaries.
+    """Executes a stage list over one backend with artifact-lifecycle
+    management: liveness pruning, placement-aware elastic checkpoints,
+    and segment-level (mid-stage) resume for ResumableStages.
 
     checkpoint: optional :class:`repro.checkpoint.CheckpointManager`.
-    After stage i completes, the full artifact namespace is saved at step
-    i+1 with ``{"pipeline": name, "stage": stage.name}`` in the manifest;
-    ``run(..., resume=True)`` restores the newest compatible checkpoint
-    and re-executes only the remaining stages.
-    checkpoint_artifacts: restrict which artifacts are persisted (e.g.
-    drop the O(n^2) ``graph`` once ``geodesics`` exist); None saves all.
+    After stage i completes, the *live* artifact set (see module
+    docstring) is saved at step (i+1)*stride with the stage name, config
+    fingerprint, per-artifact producers and placements in the manifest;
+    between segments of a ResumableStage the segment state is saved with
+    a progress manifest.  ``run(..., resume=True)`` restores the newest
+    compatible checkpoint - boundary or mid-stage - places every artifact
+    onto the current backend (elastic restart), and re-executes only the
+    remaining work.
+    checkpoint_artifacts: additionally restrict which artifacts are
+    persisted (applied on top of liveness; "x" is always kept); None
+    saves the full live set.
+    exports: artifacts that must survive to the end of the run (and
+    hence into every later checkpoint).  Default: "x", every stage's
+    declared ``exports``, and the final stage's `provides`.
     """
 
     def __init__(
@@ -394,6 +626,7 @@ class ManifoldPipeline:
         cfg: PipelineConfig | None = None,
         checkpoint=None,
         checkpoint_artifacts: Sequence[str] | None = None,
+        exports: Sequence[str] | None = None,
         name: str = "isomap",
     ):
         self.stages = list(stages) if stages is not None else isomap_stages()
@@ -408,6 +641,23 @@ class ManifoldPipeline:
         )
         self.name = name
         self._validate()
+        if exports is not None:
+            self.exports = tuple(dict.fromkeys(["x", *exports]))
+        else:
+            ex = {"x"}
+            for s in self.stages:
+                ex |= set(getattr(s, "exports", ()))
+            ex |= set(self.stages[-1].provides)
+            self.exports = tuple(sorted(ex))
+        producible = {"x"}
+        for s in self.stages:
+            producible |= set(s.provides)
+        unknown = set(self.exports) - producible
+        if unknown:
+            raise ValueError(
+                f"exports {sorted(unknown)} are not produced by any stage "
+                f"(producible: {sorted(producible)})"
+            )
 
     @property
     def cfg(self) -> PipelineConfig:
@@ -431,6 +681,25 @@ class ManifoldPipeline:
                 )
             available.update(s.provides)
 
+    # --------------------------------------------------------- liveness --
+
+    def _live_after(self, i: int) -> set[str]:
+        """Artifacts that must stay resident once stage i has completed:
+        the exports plus everything any remaining stage still consumes."""
+        live = {"x"} | set(self.exports)
+        for s in self.stages[i + 1:]:
+            live |= set(s.requires)
+            live |= set(getattr(s, "segment_requires", ()))
+        return live
+
+    def _live_during(self, i: int) -> set[str]:
+        """Artifacts a *mid-stage* checkpoint of stage i must persist:
+        what stage i's remaining segments read, plus everything after."""
+        stage = self.stages[i]
+        return self._live_after(i) | set(
+            getattr(stage, "segment_requires", ())
+        )
+
     # ----------------------------------------------------------- resume --
 
     def _cfg_fingerprint(self) -> dict:
@@ -439,35 +708,79 @@ class ManifoldPipeline:
 
         return json.loads(json.dumps(dataclasses.asdict(self.ctx.cfg)))
 
-    def _find_resume_point(self) -> tuple[int, Artifacts | None]:
-        """-> (first stage index to run, restored artifacts or None).
+    def _stage_params_fingerprint(self) -> dict:
+        """{stage name: identity params} for every stage declaring any,
+        JSON-round-tripped for manifest comparison."""
+        import json
+
+        fps = {
+            s.name: _stage_fingerprint(s)
+            for s in self.stages
+            if _stage_fingerprint(s)
+        }
+        return json.loads(json.dumps(fps))
+
+    def _find_resume_point(self) -> _ResumePoint:
+        """Scan checkpoints newest-first for a usable re-entry point.
 
         A checkpoint is only a valid resume point if (a) it was written by
         a pipeline with this name AND the same config (a k=10 geodesic
         matrix must not silently answer a k=15 run), and (b) its saved
         artifacts satisfy the `requires` chain of every remaining stage
-        (checkpoint_artifacts filtering may have dropped some) - otherwise
-        the scan falls back to an older boundary.
+        (liveness pruning / checkpoint_artifacts filtering may have
+        dropped some) - otherwise the scan falls back to an older step.
+        Mid-stage (partial) checkpoints additionally need their segment
+        state and the stage's `segment_requires` present, and re-enter
+        the stage at the recorded unit.
         """
         names = [s.name for s in self.stages]
         cfg_fp = self._cfg_fingerprint()
+        state_prefix = SEGMENT_STATE_KEY + "/"
         for step in reversed(self.checkpoint.all_steps()):
             try:
                 manifest = self.checkpoint.read_manifest(step)
-            except OSError:
+            except (OSError, ValueError):
                 continue
             if manifest.get("pipeline") != self.name:
                 continue
-            stage = manifest.get("stage")
-            if stage not in names:
+            stage_name = manifest.get("stage")
+            if stage_name not in names:
                 continue
             saved_cfg = manifest.get("config")
             if saved_cfg is not None and saved_cfg != cfg_fp:
                 continue
-            start = names.index(stage) + 1
-            available = set(manifest.get("keys", [])) | {"x"}
+            idx = names.index(stage_name)
+            # stage-identity params (e.g. LandmarkStage m/sweeps) of every
+            # stage whose outputs/state this checkpoint would hand us must
+            # match - a 32-landmark dl panel is not a 16-landmark answer
+            saved_sp = manifest.get("stage_params") or {}
+            sp_fp = self._stage_params_fingerprint()
+            if any(
+                saved_sp.get(s.name) != sp_fp.get(s.name)
+                for s in self.stages[: idx + 1]
+            ):
+                continue
+            keys = set(manifest.get("keys", []))
+            state_keys = {k for k in keys if k.startswith(state_prefix)}
+            partial = bool(manifest.get("partial"))
+            if partial:
+                stage = self.stages[idx]
+                if not _is_resumable(stage) or not state_keys:
+                    continue
+                seg_req = set(getattr(stage, "segment_requires", ()))
+                if not seg_req <= (keys | {"x"}):
+                    continue
+                start = idx
+                # once stage idx finishes its remaining segments it will
+                # provide its outputs; check the chain from there
+                available = (keys - state_keys) | {"x"} | set(stage.provides)
+                check_from = idx + 1
+            else:
+                start = idx + 1
+                available = keys | {"x"}
+                check_from = start
             satisfiable = True
-            for s in self.stages[start:]:
+            for s in self.stages[check_from:]:
                 if not set(s.requires) <= available:
                     satisfiable = False
                     break
@@ -476,24 +789,146 @@ class ManifoldPipeline:
                 continue
             try:
                 restored = self.checkpoint.restore_flat(step)
-            except (OSError, KeyError):
+            except (OSError, KeyError, ValueError):
                 # step GC'd between the manifest read and the array load
                 # (async writer retention), or arrays missing: fall back
                 continue
-            art = {k: jnp.asarray(v) for k, v in restored.items()}
-            return start, art
-        return 0, None
+            placements = manifest.get("placements") or {}
+            producers = manifest.get("producers") or {}
+            seg_state = None
+            seg_lo = 0
+            if partial:
+                seg_state = {
+                    k[len(state_prefix):]: v
+                    for k, v in restored.items()
+                    if k.startswith(state_prefix)
+                }
+                restored = {
+                    k: v for k, v in restored.items()
+                    if not k.startswith(state_prefix)
+                }
+                seg_lo = int(manifest.get("segment", 0))
+            return _ResumePoint(
+                start=start, artifacts=restored, placements=placements,
+                producers=producers, seg_state=seg_state, seg_lo=seg_lo,
+            )
+        return _ResumePoint(start=0)
+
+    # ------------------------------------------------------ checkpoints --
+
+    def _checkpoint_filter(self, payload: dict) -> dict:
+        if self.checkpoint_artifacts is None:
+            return payload
+        keep = set(self.checkpoint_artifacts) | {"x"}
+        return {k: v for k, v in payload.items() if k in keep}
+
+    def _save_boundary(self, i: int, stage, store: ArtifactStore):
+        payload = self._checkpoint_filter(dict(store))
+        placements = {
+            k: store.record(k).placement for k in payload
+        }
+        self.checkpoint.save(
+            (i + 1) * _STEP_STRIDE,
+            payload,
+            manifest_extra={
+                "pipeline": self.name,
+                "stage": stage.name,
+                "config": self._cfg_fingerprint(),
+                "stage_params": self._stage_params_fingerprint(),
+                "producers": {
+                    k: store.record(k).producer for k in payload
+                },
+                "placements": placements,
+                "exports": list(self.exports),
+            },
+        )
+
+    def _save_partial(
+        self, i: int, stage, store: ArtifactStore,
+        state: dict, hi: int, total: int,
+    ):
+        backend = self.ctx.backend
+        live = self._live_during(i)
+        payload = self._checkpoint_filter(
+            {k: v for k, v in store.items() if k in live}
+        )
+        placements = {k: store.record(k).placement for k in payload}
+        for k, v in state.items():
+            placements[f"{SEGMENT_STATE_KEY}/{k}"] = backend.placement_of(v)
+        payload = dict(payload)
+        payload[SEGMENT_STATE_KEY] = dict(state)
+        self.checkpoint.save(
+            i * _STEP_STRIDE + hi,
+            payload,
+            manifest_extra={
+                "pipeline": self.name,
+                "stage": stage.name,
+                "config": self._cfg_fingerprint(),
+                "stage_params": self._stage_params_fingerprint(),
+                "partial": True,
+                "segment": hi,
+                "total": total,
+                "producers": {
+                    k: store.record(k).producer for k in payload
+                    if k != SEGMENT_STATE_KEY
+                },
+                "placements": placements,
+                "exports": list(self.exports),
+            },
+        )
 
     # -------------------------------------------------------------- run --
 
-    def run(self, x, *, resume: bool = False) -> Artifacts:
-        """Execute the pipeline on input points x (n, D) -> artifacts."""
-        art: Artifacts = {"x": x}
-        start = 0
+    def _run_resumable(
+        self, i: int, stage, store: ArtifactStore,
+        seg_state: dict | None, seg_lo: int,
+    ) -> Artifacts:
+        """Drive a ResumableStage segment by segment, checkpointing the
+        segment state + progress manifest between segments."""
+        ctx = self.ctx
+        total = int(stage.num_units(ctx, store))
+        if total >= _STEP_STRIDE:
+            raise ValueError(
+                f"stage {stage.name!r} has {total} units; the step "
+                f"numbering supports < {_STEP_STRIDE}"
+            )
+        if seg_state is None:
+            state = stage.init_state(ctx, store)
+            lo = 0
+        else:
+            state = seg_state
+            lo = seg_lo
+        seglen = (
+            getattr(stage, "segment", None)
+            or getattr(ctx.backend, "segment", None)
+            or total
+        )
+        while lo < total:
+            hi = min(lo + seglen, total)
+            state = stage.run_segment(ctx, store, state, lo, hi)
+            if self.checkpoint is not None and hi < total:
+                self._save_partial(i, stage, store, state, hi, total)
+            lo = hi
+        return stage.finalize(ctx, store, state)
+
+    def run(self, x, *, resume: bool = False) -> ArtifactStore:
+        """Execute the pipeline on input points x (n, D).
+
+        Returns the :class:`~repro.core.artifacts.ArtifactStore` holding
+        the exported artifacts (a Mapping - ``art["embedding"]`` etc.).
+        """
+        backend = self.ctx.backend
+        store = ArtifactStore()
+        store.exports = self.exports
+        store.put(
+            "x", x, producer="input", placement=backend.placement_of(x)
+        )
+        start, seg_state, seg_lo = 0, None, 0
         if resume and self.checkpoint is not None:
-            start, restored = self._find_resume_point()
-            if restored is not None:
-                x_saved = restored.get("x")
+            point = self._find_resume_point()
+            start = point.start
+            if point.artifacts is not None:
+                x_saved = point.artifacts.get("x")
                 if x_saved is not None and (
                     x_saved.shape != x.shape
                     or not _same_input(x_saved, x)
@@ -505,27 +940,42 @@ class ManifoldPipeline:
                         "pass the original points, a fresh checkpoint "
                         "directory, or resume=False"
                     )
-                restored.setdefault("x", x)
-                art = restored
+                for k, v in point.artifacts.items():
+                    if k == "x":
+                        continue  # keep the caller's (already placed) x
+                    placement = point.placements.get(k)
+                    store.put(
+                        k, backend.place(v, placement),
+                        producer=point.producers.get(k, "checkpoint"),
+                        placement=placement,
+                    )
+                if point.seg_state is not None:
+                    prefix = SEGMENT_STATE_KEY + "/"
+                    seg_state = {
+                        k: backend.place(
+                            v, point.placements.get(prefix + k)
+                        )
+                        for k, v in point.seg_state.items()
+                    }
+                    seg_lo = point.seg_lo
         for i in range(start, len(self.stages)):
             stage = self.stages[i]
-            art.update(stage.run(self.ctx, art))
-            if self.checkpoint is not None:
-                save = art
-                if self.checkpoint_artifacts is not None:
-                    save = {
-                        k: v for k, v in art.items()
-                        if k in self.checkpoint_artifacts or k == "x"
-                    }
-                self.checkpoint.save(
-                    i + 1,
-                    save,
-                    manifest_extra={
-                        "pipeline": self.name,
-                        "stage": stage.name,
-                        "config": self._cfg_fingerprint(),
-                    },
+            if _is_resumable(stage):
+                out = self._run_resumable(
+                    i, stage, store,
+                    seg_state if i == start else None,
+                    seg_lo if i == start else 0,
                 )
+            else:
+                out = stage.run(self.ctx, store)
+            for k, v in out.items():
+                store.put(
+                    k, v, producer=stage.name,
+                    placement=backend.placement_of(v),
+                )
+            store.prune(self._live_after(i))
+            if self.checkpoint is not None:
+                self._save_boundary(i, stage, store)
         if self.checkpoint is not None:
             self.checkpoint.wait()
-        return art
+        return store

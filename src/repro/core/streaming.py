@@ -255,11 +255,34 @@ class StreamingMapper:
         # the O(n^2) triangulation constant: once per fit, not per batch
         self.mean_sq = self.backend.row_mean_sq(self.geodesics)
 
+    #: the artifacts this mapper serves from - must be *exported* by the
+    #: fitted pipeline (liveness pruning drops everything else)
+    SERVING_ARTIFACTS = ("x", "geodesics", "embedding")
+
     @classmethod
     def from_artifacts(
-        cls, artifacts: dict, *, k: int = 10, batch: int = 256, backend=None
+        cls, artifacts, *, k: int = 10, batch: int = 256, backend=None
     ):
-        """Build from a ManifoldPipeline.run() artifact namespace."""
+        """Build from a ManifoldPipeline.run() result (an ArtifactStore
+        Mapping, or any plain dict with the same keys).
+
+        The store only retains *exported* artifacts - the engine drops
+        consumed intermediates as their last consumer runs - so serving
+        state is exactly the export set this mapper names in
+        ``SERVING_ARTIFACTS``.  A pipeline configured with exports that
+        drop any of them fails here with a clear message instead of a
+        KeyError deep in the constructor.
+        """
+        missing = [a for a in cls.SERVING_ARTIFACTS if a not in artifacts]
+        if missing:
+            exports = getattr(artifacts, "exports", ())
+            raise KeyError(
+                f"artifacts {missing} absent from the fitted pipeline "
+                f"result (available: {sorted(artifacts)}"
+                + (f", exports: {sorted(exports)}" if exports else "")
+                + "); the pipeline must export x/geodesics/embedding "
+                "for streaming serving"
+            )
         return cls(
             artifacts["x"], artifacts["geodesics"], artifacts["embedding"],
             k=k, batch=batch, backend=backend,
@@ -281,9 +304,7 @@ class StreamingMapper:
                 manifest = manager.read_manifest(step)
             except OSError:
                 continue
-            if {"x", "geodesics", "embedding"} <= set(
-                manifest.get("keys", [])
-            ):
+            if set(cls.SERVING_ARTIFACTS) <= set(manifest.get("keys", [])):
                 try:
                     art = manager.restore_flat(step)
                 except (OSError, KeyError):

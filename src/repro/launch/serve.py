@@ -96,6 +96,11 @@ def generate(
     }
 
 
+# Fixed feature-padding width for sharded manifold serving: checkpoints
+# stay portable across any mesh whose model axis divides it (1/2/4).
+_FEATURE_PAD = 4
+
+
 def serve_manifold(
     *,
     n_base: int = 512,
@@ -108,6 +113,7 @@ def serve_manifold(
     arrival: int = 1,
     checkpoint_dir: str | None = None,
     resume: bool = False,
+    mesh_shape: tuple[int, int] | None = None,
     seed: int = 0,
 ):
     """Fit the staged Isomap pipeline on a base batch, then serve streamed
@@ -115,15 +121,52 @@ def serve_manifold(
     points) is submitted to a :class:`BatchedMapperService` whose scheduler
     coalesces requests up to ``stream_batch`` points or ``max_latency_ms``
     of queueing, whichever first, and drains them into the StreamingMapper.
+
+    checkpoint_dir/resume: a server restart restores the fitted artifacts
+    from the stage-boundary checkpoints instead of refitting - and because
+    the restore path is placement-aware, the restart may land on a
+    *different* mesh shape (features are padded to a fixed mesh-independent
+    width so the checkpointed input matches): artifacts are ``device_put``
+    straight onto the current mesh's tile sharding.
+    mesh_shape: (data, model) device grid; None serves single-device.
     Returns timing + per-request latency percentiles + quality."""
     from repro.core import metrics
-    from repro.core.pipeline import ManifoldPipeline, PipelineConfig
+    from repro.core.pipeline import (
+        LocalBackend, ManifoldPipeline, MeshBackend, PipelineConfig,
+    )
     from repro.core.streaming import StreamingMapper
     from repro.data import euler_isometric_swiss_roll
     from repro.launch.serving import BatchedMapperService
 
     x, latent = euler_isometric_swiss_roll(n_base + n_stream, seed=seed)
     x_base, x_stream = jnp.asarray(x[:n_base]), np.asarray(x[n_base:])
+
+    backend = None
+    if mesh_shape is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # pad features to a fixed multiple of _FEATURE_PAD, independent of
+        # the current mesh, so a checkpoint written under one mesh shape
+        # resumes under another (the input value-check compares x): any
+        # model axis dividing _FEATURE_PAD sees the same padded width.
+        # Zero feature columns leave all pairwise distances unchanged.
+        pm = mesh_shape[1]
+        if _FEATURE_PAD % pm:
+            raise ValueError(
+                f"model axis {pm} must divide {_FEATURE_PAD} (the fixed "
+                "feature padding width that keeps checkpoints portable "
+                "across mesh shapes)"
+            )
+        D = x_base.shape[1]
+        if D % _FEATURE_PAD:
+            pad = _FEATURE_PAD - D % _FEATURE_PAD
+            x_base = jnp.pad(x_base, ((0, 0), (0, pad)))
+            x_stream = np.pad(x_stream, ((0, 0), (0, pad)))
+        mesh = mesh_lib.make_mesh(mesh_shape, ("data", "model"))
+        backend = MeshBackend(mesh)
+        x_base = jax.device_put(
+            x_base, NamedSharding(mesh, P("data", "model"))
+        )
 
     checkpoint = None
     if checkpoint_dir:
@@ -132,14 +175,18 @@ def serve_manifold(
         checkpoint = CheckpointManager(checkpoint_dir)
 
     pipe = ManifoldPipeline(
-        cfg=PipelineConfig(k=k, d=d, block=block), checkpoint=checkpoint
+        cfg=PipelineConfig(k=k, d=d, block=block),
+        backend=backend or LocalBackend(),
+        checkpoint=checkpoint,
     )
     t0 = time.time()
     art = pipe.run(x_base, resume=resume)
     jax.block_until_ready(art["embedding"])
     t_fit = time.time() - t0
 
-    mapper = StreamingMapper.from_artifacts(art, k=k, batch=stream_batch)
+    mapper = StreamingMapper.from_artifacts(
+        art, k=k, batch=stream_batch, backend=backend
+    )
     service = BatchedMapperService(
         mapper, max_batch=stream_batch, max_latency_ms=max_latency_ms
     )
@@ -206,8 +253,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--d", type=int, default=2)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--checkpoint-dir", default=None)
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument(
+        "--checkpoint-dir", default=None,
+        help="persist/restore the fitted pipeline at stage boundaries",
+    )
+    ap.add_argument(
+        "--resume", action="store_true",
+        help="restore the fitted pipeline from --checkpoint-dir instead "
+        "of refitting (placement-aware: works across mesh shapes)",
+    )
+    ap.add_argument(
+        "--mesh", default=None, metavar="DxM",
+        help="serve sharded over a (data, model) device grid, e.g. 4x2 "
+        "(device count must be available; set XLA_FLAGS for fake CPUs)",
+    )
     return ap
 
 
@@ -215,6 +274,12 @@ def main():
     ap = build_parser()
     args = ap.parse_args()
     if args.manifold:
+        mesh_shape = None
+        if args.mesh:
+            parts = args.mesh.lower().split("x")
+            if len(parts) != 2 or not all(p.isdigit() and p for p in parts):
+                ap.error("--mesh must look like 4x2 (data x model)")
+            mesh_shape = (int(parts[0]), int(parts[1]))
         out = serve_manifold(
             n_base=args.n_base,
             n_stream=args.n_stream,
@@ -227,6 +292,7 @@ def main():
             seed=args.seed,
             checkpoint_dir=args.checkpoint_dir,
             resume=args.resume,
+            mesh_shape=mesh_shape,
         )
         print(
             f"[serve manifold] fit={out['fit_s']:.2f}s "

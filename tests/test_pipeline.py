@@ -124,13 +124,39 @@ def test_pipeline_artifacts_and_driver_parity():
     cfg = isomap.IsomapConfig(k=10, d=2, block=128)
     pipe = ManifoldPipeline(cfg=cfg.to_pipeline())
     art = pipe.run(x)
-    for key in ("knn_dists", "knn_idx", "graph", "geodesics_raw",
-                "geodesics", "gram", "embedding"):
+    # exported artifacts survive the run...
+    for key in ("x", "geodesics", "embedding", "eigenvalues", "iterations"):
         assert key in art, key
+    # ...consumed intermediates are dropped when their last consumer runs
+    for key in ("knn_dists", "knn_idx", "graph", "geodesics_raw", "gram"):
+        assert key not in art, key
+    assert set(art) == set(pipe.exports)
+    assert art.exports == pipe.exports  # stamped on the returned store
+    # lifecycle metadata: every artifact knows its producing stage
+    assert art.record("geodesics").producer == "clamp"
+    assert art.record("embedding").producer == "eigen"
+    assert art.record("x").producer == "input"
     res = isomap.isomap(x, cfg)
     np.testing.assert_array_equal(
         np.asarray(art["embedding"]), np.asarray(res.embedding)
     )
+
+
+def test_pipeline_exports_override_keeps_intermediates():
+    """An explicit exports list overrides the stage-declared defaults -
+    here keeping the gram matrix alive through the end of the run."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+    art = ManifoldPipeline(
+        cfg=cfg, exports=("gram", "embedding", "geodesics")
+    ).run(jnp.asarray(x))
+    assert "gram" in art
+    assert "graph" not in art  # still pruned: nobody exported it
+
+
+def test_pipeline_rejects_unknown_exports():
+    with pytest.raises(ValueError, match="exports"):
+        ManifoldPipeline(exports=("not_an_artifact",))
 
 
 def test_pipeline_validates_stage_graph():
@@ -291,6 +317,253 @@ def test_pipeline_resume_falls_back_past_filtered_checkpoints(tmp_path):
     oracle = ManifoldPipeline(cfg=cfg).run(x)
     np.testing.assert_array_equal(
         np.asarray(art["embedding"]), np.asarray(oracle["embedding"])
+    )
+
+
+# ------------------------------------------- artifact lifecycle engine ----
+
+
+class _Tracker:
+    """Transparent stage wrapper recording which stages (re-)ran."""
+
+    def __init__(self, inner, log):
+        self.inner = inner
+        self.log = log
+        self.name = inner.name
+        self.requires = inner.requires
+        self.provides = inner.provides
+        for attr in ("exports", "segment_requires"):
+            if hasattr(inner, attr):
+                setattr(self, attr, getattr(inner, attr))
+
+    def run(self, ctx, a):
+        self.log.append(self.name)
+        return self.inner.run(ctx, a)
+
+
+def test_checkpoints_persist_only_live_artifacts(tmp_path):
+    """Acceptance: the boundary written after `eigen` holds only exported
+    artifacts - no graph/geodesics_raw/gram - and every earlier boundary
+    has already dropped the intermediates its remaining stages no longer
+    need (payloads are O(n^2), not O(stages * n^2))."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    mgr = CheckpointManager(str(tmp_path), keep=20)
+    pipe = ManifoldPipeline(
+        cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr
+    )
+    pipe.run(jnp.asarray(x))
+    by_stage = {
+        mgr.read_manifest(s)["stage"]: set(mgr.read_manifest(s)["keys"])
+        for s in mgr.all_steps()
+    }
+    assert by_stage["eigen"] & {"graph", "geodesics_raw", "gram"} == set()
+    assert {"x", "geodesics", "embedding"} <= by_stage["eigen"]
+    # graph is consumed by apsp: gone from the apsp boundary onward
+    assert "graph" in by_stage["graph"]
+    assert "graph" not in by_stage["apsp"]
+    # geodesics_raw is consumed by clamp: gone from the clamp boundary
+    assert "geodesics_raw" in by_stage["apsp"]
+    assert "geodesics_raw" not in by_stage["clamp"]
+    # gram is consumed by eigen: alive only at the center boundary
+    assert "gram" in by_stage["center"]
+    assert "gram" not in by_stage["eigen"]
+    # placements + producers recorded for every persisted artifact
+    final = mgr.read_manifest(mgr.all_steps()[-1])
+    assert set(final["placements"]) == set(final["keys"])
+    assert final["producers"]["geodesics"] == "clamp"
+
+
+def test_resume_scan_falls_back_when_pruning_invalidates_newest(tmp_path):
+    """Satellite: checkpoint_artifacts filtering + liveness pruning can
+    make the newest boundary unsatisfiable for a longer stage chain; the
+    scan must fall back to an older step that still holds what the
+    remaining stages require - not KeyError, not a full re-run."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2, block=128)
+    mgr = CheckpointManager(str(tmp_path), keep=20)
+    ManifoldPipeline(cfg=cfg, checkpoint=mgr).run(x)
+    # newest boundary (eigen) dropped gram; an extended pipeline with an
+    # extra stage consuming gram cannot resume there
+    assert "gram" not in mgr.read_manifest(mgr.all_steps()[-1])["keys"]
+
+    class GramNorm:
+        name = "gram_norm"
+        requires = ("gram",)
+        provides = ("gram_norm",)
+
+        def run(self, ctx, a):
+            return {"gram_norm": jnp.linalg.norm(a["gram"])}
+
+    ran = []
+    stages = [_Tracker(s, ran) for s in isomap_stages()] + [GramNorm()]
+    mgr2 = CheckpointManager(str(tmp_path), keep=20)
+    art = ManifoldPipeline(stages, cfg=cfg, checkpoint=mgr2).run(
+        x, resume=True
+    )
+    # fell back to the center boundary (gram still live there): only
+    # eigen re-ran before the new tail stage
+    assert ran == ["eigen"], ran
+    assert "gram_norm" in art
+    oracle = ManifoldPipeline(cfg=cfg).run(x)
+    np.testing.assert_allclose(
+        np.asarray(art["embedding"]), np.asarray(oracle["embedding"]),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_segmented_apsp_checkpoint_and_mid_stage_resume(tmp_path):
+    """Kill mid-APSP (after 2 of 4 diagonal panels), resume: the engine
+    re-enters the stage at the recorded panel and the final geodesics are
+    bit-identical to an uninterrupted run.  The mid-stage checkpoint
+    holds ONE O(n^2) array (the evolving state subsumes the graph)."""
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2, block=64)  # q = 4 panels
+    oracle = ManifoldPipeline(cfg=cfg).run(x)
+
+    class Boom(Exception):
+        pass
+
+    from repro.core.pipeline import APSPStage
+
+    class ExplodingAPSP(APSPStage):
+        def run_segment(self, ctx, art, state, lo, hi):
+            if lo >= 2:
+                raise Boom()
+            return super().run_segment(ctx, art, state, lo, hi)
+
+    mgr = CheckpointManager(str(tmp_path), keep=50)
+    stages = [
+        s if s.name != "apsp" else ExplodingAPSP() for s in isomap_stages()
+    ]
+    pipe = ManifoldPipeline(
+        stages, cfg=cfg, backend=LocalBackend(segment=1), checkpoint=mgr
+    )
+    with pytest.raises(Boom):
+        pipe.run(x)
+    mgr.wait()
+    partial = mgr.read_manifest(mgr.latest_step())
+    assert partial["partial"] and partial["segment"] == 2
+    assert "_segstate/g" in partial["keys"]
+    assert "graph" not in partial["keys"]  # state subsumes the input
+
+    segs = []
+
+    class TrackingAPSP(APSPStage):
+        def run_segment(self, ctx, art, state, lo, hi):
+            segs.append((int(lo), int(hi)))
+            return super().run_segment(ctx, art, state, lo, hi)
+
+    stages2 = [
+        s if s.name != "apsp" else TrackingAPSP() for s in isomap_stages()
+    ]
+    mgr2 = CheckpointManager(str(tmp_path), keep=50)
+    art = ManifoldPipeline(
+        stages2, cfg=cfg, backend=LocalBackend(segment=1), checkpoint=mgr2
+    ).run(x, resume=True)
+    assert segs == [(2, 3), (3, 4)], segs  # only the remaining panels ran
+    np.testing.assert_array_equal(
+        np.asarray(art["geodesics"]), np.asarray(oracle["geodesics"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(oracle["embedding"])
+    )
+
+
+def test_landmark_mid_sweep_checkpoint_and_resume(tmp_path):
+    """The landmark Bellman-Ford tail checkpoints mid-sweep through the
+    same ResumableStage protocol; its segment checkpoints keep the graph
+    (segment_requires) because every sweep relaxes against it."""
+    from repro.core.isomap import LandmarkStage
+
+    x, _ = euler_isometric_swiss_roll(256, seed=1)
+    x = jnp.asarray(x)
+    cfg = PipelineConfig(k=10, d=2)
+    oracle = ManifoldPipeline(
+        [KNNStage(), GraphStage(), LandmarkStage(32)],
+        cfg=cfg, name="landmark_isomap",
+    ).run(x)
+
+    class Boom(Exception):
+        pass
+
+    class ExplodingLandmark(LandmarkStage):
+        def run_segment(self, ctx, art, state, lo, hi):
+            if lo >= 16:
+                raise Boom()
+            return super().run_segment(ctx, art, state, lo, hi)
+
+    mgr = CheckpointManager(str(tmp_path), keep=50)
+    pipe = ManifoldPipeline(
+        [KNNStage(), GraphStage(), ExplodingLandmark(32, segment=8)],
+        cfg=cfg, checkpoint=mgr, name="landmark_isomap",
+    )
+    with pytest.raises(Boom):
+        pipe.run(x)
+    mgr.wait()
+    partial = mgr.read_manifest(mgr.latest_step())
+    assert partial["partial"] and partial["segment"] == 16
+    assert {"_segstate/dl", "graph"} <= set(partial["keys"])
+
+    segs = []
+
+    class TrackingLandmark(LandmarkStage):
+        def run_segment(self, ctx, art, state, lo, hi):
+            segs.append((int(lo), int(hi)))
+            return super().run_segment(ctx, art, state, lo, hi)
+
+    mgr2 = CheckpointManager(str(tmp_path), keep=50)
+    art = ManifoldPipeline(
+        [KNNStage(), GraphStage(), TrackingLandmark(32, segment=8)],
+        cfg=cfg, checkpoint=mgr2, name="landmark_isomap",
+    ).run(x, resume=True)
+    assert segs == [(16, 24), (24, 32)], segs
+    np.testing.assert_array_equal(
+        np.asarray(art["embedding"]), np.asarray(oracle["embedding"])
+    )
+
+    # stage-identity params are part of resume compatibility: a pipeline
+    # asking for a DIFFERENT landmark count must not adopt the m=32
+    # checkpoints (neither the mid-sweep state nor the graph boundary is
+    # wrong for it, but the landmark stage params changed)
+    segs16 = []
+
+    class Tracking16(TrackingLandmark):
+        def run_segment(self, ctx, art, state, lo, hi):
+            segs16.append((int(lo), int(hi)))
+            return LandmarkStage.run_segment(self, ctx, art, state, lo, hi)
+
+    mgr3 = CheckpointManager(str(tmp_path), keep=50)
+    art16 = ManifoldPipeline(
+        [KNNStage(), GraphStage(), Tracking16(16, segment=8)],
+        cfg=cfg, checkpoint=mgr3, name="landmark_isomap",
+    ).run(x, resume=True)
+    # resumed from the graph boundary (landmark params unchanged there),
+    # then ran the full 32-sweep landmark tail with m=16 from scratch
+    assert segs16 == [(0, 8), (8, 16), (16, 24), (24, 32)], segs16
+    assert art16["landmark_embedding"].shape[0] == 16
+
+
+def test_all_steps_tolerates_malformed_entries(tmp_path):
+    """Satellite: a stray step_foo file/dir in the checkpoint directory
+    must not kill every resume scan with ValueError from int() - and a
+    manual step_0000000003_backup copy must neither alias step 3 nor
+    become a phantom latest_step."""
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    mgr.save(3, {"x": jnp.zeros((2,))}, blocking=True)
+    (tmp_path / "step_foo").write_text("not a checkpoint")
+    (tmp_path / "step_").mkdir()
+    (tmp_path / "step_0000000003_backup").mkdir()
+    (tmp_path / "step_5_old").mkdir()
+    (tmp_path / "unrelated.txt").write_text("")
+    assert mgr.all_steps() == [3]
+    assert mgr.latest_step() == 3
+    # and the pipeline resume scan over such a directory still works
+    x, _ = euler_isometric_swiss_roll(128, seed=1)
+    cfg = PipelineConfig(k=10, d=2, block=64)
+    ManifoldPipeline(cfg=cfg, checkpoint=mgr).run(
+        jnp.asarray(x), resume=True
     )
 
 
