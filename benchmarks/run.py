@@ -11,6 +11,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      (interpret-mode Pallas is not representative on CPU, so
                      kernels are benchmarked through their jnp reference
                      path, which is what executes off-TPU).
+  * apsp2_*        - Phase-2 panel sweep: fused in-place panel kernels vs
+                     the materializing min(panel, minplus(...)) composition
+                     (asserted bit-identical and intermediate-free), and the
+                     trace-time autotuner's tile choice vs the static
+                     default under the shared roofline model.
   * stage_*        - per-stage breakdown at a fixed n (kNN/APSP/center/eig).
 """
 from __future__ import annotations
@@ -105,6 +110,133 @@ def bench_kernels():
     _row("kernel_pairwise_1024x784", t, f"{2 * 1024 * 1024 * 784 / t / 1e9:.1f}_GFLOP_s")
 
 
+def _shaped_vars(jaxpr, shape) -> int:
+    """Count intermediate variables of `shape` across a closed jaxpr
+    (recursing into sub-jaxprs).  A materializing composition carries the
+    full min-plus product as an extra variable of the panel's shape; the
+    fused kernels never create one."""
+    count = 0
+
+    def walk(jx):
+        nonlocal count
+        for eq in jx.eqns:
+            for v in eq.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) == shape:
+                    count += 1
+            for sub in eq.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else (sub,)
+                for s in subs:
+                    if hasattr(s, "jaxpr"):
+                        walk(s.jaxpr)
+
+    walk(jaxpr.jaxpr)
+    return count
+
+
+def bench_apsp_phase2(smoke: bool = False):
+    """Phase-2 panel sweep (--only apsp_phase2; CI runs it with --smoke).
+
+    Three claims, asserted rather than just reported:
+
+    1. the fused in-place panel kernels are bit-identical to the
+       materializing ``min(panel, minplus(...))`` composition;
+    2. the fused path materializes no (b, n)/(n, b) min-plus intermediate
+       (strictly fewer panel-shaped jaxpr variables than the
+       materializing baseline on the path that executes);
+    3. the autotuner's tile choice beats or matches the static default
+       under the shared roofline model (measured as well when a real TPU
+       backend is attached).
+    """
+    from repro.kernels import autotune, ops, ref
+
+    b, n = (128, 512) if smoke else (256, 2048)
+    mode = "auto"  # what actually executes: pallas on TPU, ref elsewhere
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(
+        ref.floyd_warshall_ref(
+            jnp.asarray(rng.uniform(1, 10, (b, b)), jnp.float32)
+        )
+    )  # FW-closed diagonal block (zero diagonal), as Phase 2 sees it
+    r = jnp.asarray(rng.uniform(0, 30, (b, n)), jnp.float32)
+    c = jnp.asarray(rng.uniform(0, 30, (n, b)), jnp.float32)
+
+    panels = {
+        "row": (
+            (b, n),
+            lambda: ops.minplus_panel_row(d, r, mode=mode),
+            lambda: jnp.minimum(r, ops.minplus(d, r, mode=mode)),
+        ),
+        "col": (
+            (n, b),
+            lambda: ops.minplus_panel_col(c, d, mode=mode),
+            lambda: jnp.minimum(c, ops.minplus(c, d, mode=mode)),
+        ),
+    }
+    for name, (shape, fused_fn, mat_fn) in panels.items():
+        t_fused = _timeit(fused_fn, repeats=2)
+        t_mat = _timeit(mat_fn, repeats=2)
+        got, want = np.asarray(fused_fn()), np.asarray(mat_fn())
+        assert np.array_equal(got, want), (
+            f"fused {name} panel is not bit-identical to the "
+            "materializing composition"
+        )
+        n_fused = _shaped_vars(jax.make_jaxpr(fused_fn)(), shape)
+        n_mat = _shaped_vars(jax.make_jaxpr(mat_fn)(), shape)
+        assert n_fused < n_mat, (
+            f"{name} panel: fused path has {n_fused} panel-shaped "
+            f"intermediates vs materializing {n_mat} - the (b, n) "
+            "min-plus intermediate is back"
+        )
+        _row(
+            f"apsp2_{name}_fused_b{b}_n{n}", t_fused,
+            f"{t_mat / t_fused:.2f}x_vs_materializing",
+        )
+        _row(f"apsp2_{name}_materializing_b{b}_n{n}", t_mat, "baseline")
+        _row(
+            f"apsp2_{name}_intermediates", 0.0,
+            f"fused={n_fused}_materializing={n_mat}",
+        )
+
+    # trace-time autotune: modeled time of the chosen config vs the
+    # static default for all three fused kernels at this problem shape
+    shapes = {
+        "minplus_panel_row": (b, n, b),
+        "minplus_panel_col": (n, b, b),
+        "minplus_update": (n, n, b),
+    }
+    for op, (m_, n_, k_) in shapes.items():
+        cfg, cost = autotune.best_config(op, m_, n_, k_)
+        dflt = autotune.default_config(m_, n_, k_)
+        dcost = autotune.modeled_cost(op, m_, n_, k_, dflt)
+        assert cost.time_s <= dcost.time_s * (1.0 + 1e-9), (
+            f"autotuned {op} config {cfg} models slower than the "
+            f"static default {dflt}"
+        )
+        _row(
+            f"apsp2_autotune_{op}", cost.time_s,
+            f"bm{cfg.bm}_bn{cfg.bn}_bk{cfg.bk}_u{cfg.unroll}_"
+            f"{dcost.time_s / cost.time_s:.2f}x_vs_default_modeled",
+        )
+    if jax.default_backend() == "tpu":
+        # with real hardware attached, also measure chosen vs default
+        for op, fn in (
+            ("minplus_panel_row",
+             lambda **kw: ops.minplus_panel_row(d, r, mode="pallas", **kw)),
+            ("minplus_panel_col",
+             lambda **kw: ops.minplus_panel_col(c, d, mode="pallas", **kw)),
+        ):
+            m_, n_, k_ = shapes[op]
+            cfg, _ = autotune.best_config(op, m_, n_, k_)
+            dflt = autotune.default_config(m_, n_, k_)
+            t_tuned = _timeit(lambda: fn(**cfg._asdict()), repeats=3)
+            t_dflt = _timeit(lambda: fn(**dflt._asdict()), repeats=3)
+            _row(
+                f"apsp2_autotune_{op}_measured", t_tuned,
+                f"{t_dflt / t_tuned:.2f}x_vs_default",
+            )
+
+
 def bench_spectral():
     """Alg. 2 convergence: iterations + time vs d."""
     from repro.core import centering, spectral
@@ -190,6 +322,44 @@ def bench_pipeline():
             f"{worst / nn_bytes:.2f}_nn_arrays",
         )
 
+    # Phase-2 fusion discipline: the APSP segment the pipeline actually
+    # runs must carry no (b, n)/(n, b) min-plus intermediate - strictly
+    # fewer panel-shaped jaxpr variables than a materializing Phase 2
+    from repro.core import apsp as apsp_mod
+    from repro.kernels import ops as kops
+
+    bsz = 128
+    gz = jnp.zeros((n, n), jnp.float32)
+    real = jax.make_jaxpr(
+        lambda g: apsp_mod.apsp_blocked_segment(
+            g, jnp.int32(0), jnp.int32(1), block=bsz
+        )
+    )(gz)
+
+    def materializing_segment(g):
+        d = kops.floyd_warshall(
+            jax.lax.dynamic_slice(g, (0, 0), (bsz, bsz))
+        )
+        r = jax.lax.dynamic_slice(g, (0, 0), (bsz, n))
+        c = jax.lax.dynamic_slice(g, (0, 0), (n, bsz))
+        r = jnp.minimum(r, kops.minplus(d, r))
+        c = jnp.minimum(c, kops.minplus(c, d))
+        return kops.minplus_update(g, c, r)
+
+    mat = jax.make_jaxpr(materializing_segment)(gz)
+    for shape, tag in (((bsz, n), "row"), ((n, bsz), "col")):
+        n_real = _shaped_vars(real, shape)
+        n_mat = _shaped_vars(mat, shape)
+        assert n_real < n_mat, (
+            f"APSP Phase 2 {tag} panel materializes again: "
+            f"{n_real} panel-shaped vars vs {n_mat} in the "
+            "materializing baseline"
+        )
+        _row(
+            f"pipeline_apsp2_{tag}_intermediates", 0.0,
+            f"fused={n_real}_materializing={n_mat}",
+        )
+
 
 def bench_lm_smoke():
     """One smoke train-step timing per architecture family."""
@@ -212,6 +382,7 @@ def bench_lm_smoke():
 
 _BENCHES = {
     "kernels": bench_kernels,
+    "apsp_phase2": bench_apsp_phase2,
     "scaling": bench_scaling,
     "blocksize": bench_blocksize,
     "spectral": bench_spectral,
@@ -222,19 +393,28 @@ _BENCHES = {
 
 def main() -> None:
     import argparse
+    import inspect
 
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", choices=sorted(_BENCHES), action="append",
         help="run just the named benchmark group(s); default all "
-        "(CI runs --only pipeline for the checkpoint-payload assertions)",
+        "(CI runs --only pipeline for the checkpoint-payload assertions "
+        "and --only apsp_phase2 --smoke for the fused-panel ones)",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="shrink problem sizes for CI (groups that support it)",
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in _BENCHES.items():
         if args.only and name not in args.only:
             continue
-        fn()
+        if "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=args.smoke)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,187 @@
+"""Docs command checker (run by the CI docs job).
+
+Extracts every ``bash``/``sh``/``console`` fenced code block from
+README.md and docs/*.md and verifies the commands are real:
+
+1. every line shlex-parses (after stripping leading ``VAR=val`` env
+   assignments and ``$`` prompts);
+2. every ``python <file>`` target exists in the repo and byte-compiles;
+3. every repo CLI referenced (a target whose source uses argparse) runs
+   ``--help`` successfully under ``PYTHONPATH=src`` — so a renamed flag
+   or a broken import in a documented entry point fails CI, not a
+   reader.
+
+External commands (pip, pytest, git, ...) are parse-checked only.
+
+Usage: python scripts/check_docs.py [--no-exec] [files...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import py_compile
+import re
+import shlex
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# commands we only parse, never execute (not repo CLIs / have side effects)
+EXTERNAL = {"pip", "pip3", "git", "cd", "export", "source"}
+# python -m targets that are third-party (parse only)
+EXTERNAL_MODULES = {"pytest", "pip"}
+
+_FENCE_RE = re.compile(
+    r"^```(bash|sh|console)\s*$(.*?)^```\s*$", re.M | re.S
+)
+
+
+def code_blocks(path: str):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in _FENCE_RE.finditer(text):
+        yield m.group(2)
+
+
+def commands_in(block: str):
+    """Yield logical command lines (continuations joined, prompts and
+    comments stripped)."""
+    pending = ""
+    for raw in block.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("$ "):
+            line = line[2:]
+        pending = (pending + " " + line[:-1].strip()
+                   if line.endswith("\\") else pending + " " + line)
+        if line.endswith("\\"):
+            continue
+        yield pending.strip()
+        pending = ""
+    if pending.strip():
+        yield pending.strip()
+
+
+def strip_env(words: list[str]) -> list[str]:
+    i = 0
+    while i < len(words) and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", words[i]):
+        i += 1
+    return words[i:]
+
+
+def uses_argparse(path: str) -> bool:
+    with open(path, encoding="utf-8") as f:
+        return "argparse" in f.read()
+
+
+def check_file(
+    doc: str, *, run_help: bool, seen_cli: set[str] | None = None
+) -> list[str]:
+    errors: list[str] = []
+    seen_cli = set() if seen_cli is None else seen_cli
+    rel = os.path.relpath(doc, REPO)
+    for block in code_blocks(doc):
+        for cmd in commands_in(block):
+            try:
+                words = strip_env(shlex.split(cmd))
+            except ValueError as e:
+                errors.append(f"{rel}: unparseable command {cmd!r}: {e}")
+                continue
+            if not words or os.path.basename(words[0]) not in (
+                "python", "python3"
+            ):
+                if words and words[0] not in EXTERNAL:
+                    errors.append(
+                        f"{rel}: unexpected command {words[0]!r} in "
+                        f"{cmd!r} (add it to EXTERNAL if intentional)"
+                    )
+                continue
+            if len(words) > 1 and words[1] == "-m":
+                mod = words[2] if len(words) > 2 else ""
+                if mod.split(".")[0] in EXTERNAL_MODULES:
+                    continue
+                mod_path = os.path.join(REPO, "src", *mod.split("."))
+                if not (
+                    os.path.isfile(mod_path + ".py")
+                    or os.path.isdir(mod_path)
+                    or os.path.isdir(os.path.join(REPO, *mod.split(".")))
+                ):
+                    errors.append(f"{rel}: module {mod!r} not found ({cmd!r})")
+                continue
+            target = next((w for w in words[1:] if not w.startswith("-")), "")
+            if not target.endswith(".py"):
+                continue
+            tpath = os.path.join(REPO, target)
+            if not os.path.isfile(tpath):
+                errors.append(f"{rel}: no such script {target!r} ({cmd!r})")
+                continue
+            try:
+                with tempfile.TemporaryDirectory() as td:
+                    py_compile.compile(
+                        tpath, doraise=True,
+                        cfile=os.path.join(td, "check.pyc"),
+                    )
+            except py_compile.PyCompileError as e:
+                errors.append(f"{rel}: {target} does not compile: {e.msg}")
+                continue
+            if run_help and target not in seen_cli and uses_argparse(tpath):
+                seen_cli.add(target)
+                env = dict(os.environ)
+                env["PYTHONPATH"] = (
+                    os.path.join(REPO, "src")
+                    + os.pathsep + env.get("PYTHONPATH", "")
+                )
+                proc = subprocess.run(
+                    [sys.executable, tpath, "--help"],
+                    cwd=REPO, env=env, capture_output=True, text=True,
+                    timeout=300,
+                )
+                if proc.returncode != 0:
+                    errors.append(
+                        f"{rel}: `{target} --help` exited "
+                        f"{proc.returncode}:\n{proc.stderr[-800:]}"
+                    )
+                else:
+                    print(f"[check_docs] ok: {target} --help")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="parse/exists checks only, skip --help smoke")
+    args = ap.parse_args()
+    docs = args.files or [
+        os.path.join(REPO, "README.md"),
+        *sorted(
+            os.path.join(REPO, "docs", f)
+            for f in os.listdir(os.path.join(REPO, "docs"))
+            if f.endswith(".md")
+        ),
+    ]
+    errors: list[str] = []
+    seen_cli: set[str] = set()  # shared: each CLI answers --help once
+    for doc in docs:
+        if not os.path.isfile(doc):
+            errors.append(f"missing doc file: {doc}")
+            continue
+        n_blocks = sum(1 for _ in code_blocks(doc))
+        print(f"[check_docs] {os.path.relpath(doc, REPO)}: "
+              f"{n_blocks} command block(s)")
+        errors.extend(
+            check_file(doc, run_help=not args.no_exec, seen_cli=seen_cli)
+        )
+    if errors:
+        print("\n".join(f"ERROR: {e}" for e in errors), file=sys.stderr)
+        return 1
+    print("[check_docs] all documented commands parse and answer --help")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

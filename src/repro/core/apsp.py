@@ -4,9 +4,14 @@ The algorithm is the Solomonik et al. / Venkataraman blocked Floyd-Warshall
 the paper casts into Spark.  Per diagonal index I (q = n/b iterations):
 
   Phase 1   D = FW(G[I,I])                       (in-VMEM kernel)
-  Phase 2   R = D (x) G[I,:]   (row panel)       (min-plus)
-            C = G[:,I] (x) D   (column panel)
+  Phase 2   R = min(R, D (x) R)  (row panel)     (fused in-place min-plus)
+            C = min(C, C (x) D)  (column panel)
   Phase 3   G = min(G, C (x) R)                  (rank-b min-plus update)
+
+All three min-plus phases run fused Pallas kernels (seeded accumulation,
+see repro.kernels.minplus_panel / minplus_update): no phase materializes
+a min-plus product intermediate in HBM, and tile sizes are picked per
+problem shape at trace time by repro.kernels.autotune.
 
 Because D has a zero diagonal, the Phase-3 update subsumes writing back D,
 R and C (min-plus idempotency) - a fusion the Spark version cannot express
@@ -64,8 +69,10 @@ def apsp_blocked_segment(
         d = ops.floyd_warshall(d, mode=mode)
         r = jax.lax.dynamic_slice(g, (off, 0), (block, n))
         c = jax.lax.dynamic_slice(g, (0, off), (n, block))
-        r = ops.minplus(d, r, mode=mode)
-        c = ops.minplus(c, d, mode=mode)
+        # Phase 2 fused: in-place panel updates min(R, D (x) R) /
+        # min(C, C (x) D) - no (b, n) min-plus intermediate
+        r = ops.minplus_panel_row(d, r, mode=mode)
+        c = ops.minplus_panel_col(c, d, mode=mode)
         # Phase 3 fused: min(G, C (x) R) without the (n, n) intermediate
         return ops.minplus_update(g, c, r, mode=mode)
 
@@ -133,21 +140,31 @@ def _apsp_shard_body(
         diag = ops.floyd_warshall(diag, mode=mode)
         # --- Phase 2: panel updates ---
         if split_panels and b % pd == 0 and b % pm == 0:
+            # fused split panels: each rank updates its 1/p slice in place
+            # (min(slice, dslice (x) panel) via the seeded Phase-3 kernel)
+            # and the group gathers - still no min-plus intermediate
             bs_r = b // pd
             dslice = jax.lax.dynamic_slice_in_dim(diag, di * bs_r, bs_r, 0)
-            row_part = ops.minplus(dslice, row, mode=mode)  # (b/pd, nc)
+            rseed = jax.lax.dynamic_slice_in_dim(row, di * bs_r, bs_r, 0)
+            row_part = ops.minplus_update(
+                rseed, dslice, row, mode=mode
+            )                                               # (b/pd, nc)
             row = jax.lax.all_gather(
                 row_part, data_axis, axis=0, tiled=True
             )                                               # (b, nc)
             bs_c = b // pm
             dslice = jax.lax.dynamic_slice_in_dim(diag, mi * bs_c, bs_c, 1)
-            col_part = ops.minplus(col, dslice, mode=mode)  # (nr, b/pm)
+            cseed = jax.lax.dynamic_slice_in_dim(col, mi * bs_c, bs_c, 1)
+            col_part = ops.minplus_update(
+                cseed, col, dslice, mode=mode
+            )                                               # (nr, b/pm)
             col = jax.lax.all_gather(
                 col_part, model_axis, axis=1, tiled=True
             )                                               # (nr, b)
         else:
-            row = ops.minplus(diag, row, mode=mode)   # (b,b) x (b,nc)
-            col = ops.minplus(col, diag, mode=mode)   # (nr,b) x (b,b)
+            # Phase 2 fused in-place panel updates (no intermediate)
+            row = ops.minplus_panel_row(diag, row, mode=mode)  # (b, nc)
+            col = ops.minplus_panel_col(col, diag, mode=mode)  # (nr, b)
         # --- Phase 3: fused rank-b min-plus update of the local tile ---
         return ops.minplus_update(g_loc, col, row, mode=mode)
 

@@ -179,7 +179,10 @@ def landmark_sweep_local(
     so one executable serves every segment length."""
 
     def relax(_, dl):
-        return jnp.minimum(dl, apsp_ops_minplus(dl, g, mode))
+        # fused seeded relaxation min(DL, DL (x) G): same kernel as APSP
+        # Phase 3, so no (m, n) min-plus intermediate is materialized
+        # (bit-identical to minimum(dl, minplus(dl, g)) - min is exact)
+        return ops.minplus_update(dl, dl, g, mode=mode)
 
     return jax.lax.fori_loop(0, sweeps, relax, dl)
 
@@ -392,5 +395,3 @@ def landmark_isomap(
     return art["embedding"], art["landmark_embedding"]
 
 
-def apsp_ops_minplus(a, b, mode):
-    return ops.minplus(a, b, mode=mode)

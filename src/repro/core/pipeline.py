@@ -18,6 +18,9 @@ first-class object.  Stage -> paper mapping:
 
 Artifact-lifecycle architecture
 -------------------------------
+(Stable prose reference: docs/architecture.md; the kernel layer the APSP
+stage dispatches into is covered by docs/kernels.md.)
+
 A :class:`Stage` consumes ``requires`` artifacts and produces ``provides``
 artifacts, executed by :class:`ManifoldPipeline` over a
 :class:`LocalBackend` or :class:`MeshBackend` (single-device and

@@ -1,0 +1,265 @@
+"""Trace-time tile autotuner for the fused min-plus Pallas kernels.
+
+The three fused kernels (:func:`repro.kernels.ops.minplus_update`,
+:func:`~repro.kernels.ops.minplus_panel_row`,
+:func:`~repro.kernels.ops.minplus_panel_col`) take static tile sizes
+``(bm, bn, bk, unroll)``.  The historical defaults (256, 256, 256, 8) are
+a fine center of the space but are not optimal for every problem shape:
+small panels leave the grid degenerate, skinny contractions want a larger
+``unroll``, and big tiles can blow the VMEM working set.
+
+This module picks the tiles **at trace time** from an analytic roofline
+model - the same machine model :mod:`repro.launch.dryrun` and
+:mod:`repro.launch.analytics` score whole pipeline stages with (the
+constants below are their single source of truth).  Min-plus runs on the
+VPU (the MXU systolic array only does *,+), so a candidate's cost is::
+
+    time = max(compute, memory)
+    compute = 2*m*n*k / (VPU_OPS * lane_fill * sublane_fill * unroll_eff)
+    memory  = HBM bytes(tiling) / HBM_BW
+
+where ``lane_fill``/``sublane_fill`` penalize tiles under the (8, 128)
+VPU register shape, ``unroll_eff = 2u/(2u+1)`` charges the running-min
+pass each rank-``unroll`` step performs on top of the broadcast-add/min,
+and HBM bytes count the seed read + output write + the per-grid-pass
+contraction re-reads (``a`` is re-read n/bn times, ``b`` m/bm times).
+Candidates whose double-buffered VMEM working set exceeds the budget are
+discarded.
+
+The sweep is pure arithmetic over a few hundred candidates, cached
+in-process per ``(op, m, n, k, itemsize)`` - so the cost is paid once per
+problem shape per process, at trace time, exactly like the kernels' own
+jit cache.
+
+Overrides (both read at every :func:`tiles_for` call):
+
+* ``REPRO_MINPLUS_TILES="bm,bn,bk,unroll"`` - pin all four knobs for
+  every fused kernel call (the kernels still clamp to the problem shape;
+  non-divisible pins fail fast with a ``ValueError`` in ops.py).
+* ``REPRO_MINPLUS_AUTOTUNE=0`` - disable the sweep and use the static
+  defaults.
+
+Explicit tile kwargs at an ``ops.*`` call site always win over both.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Iterator, NamedTuple
+
+# ----------------------------------------------------------- machine model --
+# TPU v5e constants (per chip).  Single source of truth: repro.launch
+# .analytics and repro.launch.dryrun import these for their stage-level
+# rooflines, so the kernel tuner and the pipeline cost model can never
+# disagree about the hardware.
+PEAK_FLOPS = 197e12     # bf16 FLOP/s (MXU) - reference only; min-plus is VPU
+VPU_OPS = 3.9e12        # f32 elementwise ops/s (8x128 lanes x 4 ALUs)
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+VMEM_BYTES = 16 * 2**20  # per-core vector memory
+# the pipelined working set (double-buffered streamed inputs) must fit
+# with headroom for the compiler's own temporaries
+VMEM_BUDGET = VMEM_BYTES // 2
+
+ENV_TILES = "REPRO_MINPLUS_TILES"
+ENV_AUTOTUNE = "REPRO_MINPLUS_AUTOTUNE"
+
+#: ops that seed the accumulator from an (m, n) input (one extra HBM read)
+FUSED_OPS = ("minplus_update", "minplus_panel_row", "minplus_panel_col")
+_UNSEEDED = ("minplus",)
+
+
+class TileConfig(NamedTuple):
+    """Static tile knobs of one fused min-plus kernel launch."""
+
+    bm: int
+    bn: int
+    bk: int
+    unroll: int
+
+
+DEFAULT = TileConfig(bm=256, bn=256, bk=256, unroll=8)
+
+
+class Cost(NamedTuple):
+    """Roofline terms for one (config, problem) pair, in seconds/bytes."""
+
+    time_s: float
+    compute_s: float
+    hbm_s: float
+    hbm_bytes: float
+    vmem_bytes: int
+
+
+def clamp(cfg: TileConfig, m: int, n: int, k: int) -> TileConfig:
+    """Clamp a config to the problem dims exactly like the kernels do
+    (``bm = min(bm, m)`` etc., ``unroll = min(unroll, bk)``)."""
+    bm, bn, bk = min(cfg.bm, m), min(cfg.bn, n), min(cfg.bk, k)
+    return TileConfig(bm, bn, bk, min(cfg.unroll, bk))
+
+
+def divides(cfg: TileConfig, m: int, n: int, k: int) -> bool:
+    """True when the (clamped) config tiles the problem exactly."""
+    c = clamp(cfg, m, n, k)
+    return (
+        m % c.bm == 0 and n % c.bn == 0 and k % c.bk == 0
+        and c.bk % c.unroll == 0
+    )
+
+
+def modeled_cost(
+    op: str, m: int, n: int, k: int, cfg: TileConfig, *, itemsize: int = 4
+) -> Cost:
+    """Roofline terms for running ``op`` on an (m, n) output with
+    contraction depth k under tile config ``cfg``.
+
+    ``op``: one of :data:`FUSED_OPS` (seeded accumulate) or
+    ``"minplus"`` (plain product, no seed read).
+    """
+    if op not in FUSED_OPS and op not in _UNSEEDED:
+        raise ValueError(f"unknown op {op!r}; expected one of "
+                         f"{FUSED_OPS + _UNSEEDED}")
+    bm, bn, bk, unroll = clamp(cfg, m, n, k)
+    seeded = op in FUSED_OPS
+
+    # compute: 2 VPU ops (add + min) per (i, j, k) triple, derated by
+    # register fill and the extra running-min pass per rank-unroll step
+    lane_fill = min(bn, 128) / 128.0
+    sublane_fill = min(bm, 8) / 8.0
+    unroll_eff = (2.0 * unroll) / (2.0 * unroll + 1.0)
+    eff_ops = VPU_OPS * lane_fill * sublane_fill * unroll_eff
+    compute_s = (2.0 * m * n * k) / eff_ops
+
+    # memory: contraction operands are re-fetched once per orthogonal
+    # grid pass; seed read + output write land once per output tile
+    hbm_bytes = itemsize * (
+        m * k * (n // bn)          # a tiles, re-read per j pass
+        + k * n * (m // bm)        # b tiles, re-read per i pass
+        + m * n                    # output write
+        + (m * n if seeded else 0)  # seed read
+    )
+    hbm_s = hbm_bytes / HBM_BW
+
+    # VMEM working set: a + b tiles (double-buffered while streaming),
+    # accumulator + output tile (+ seed tile view), and the transient
+    # (unroll, bm, bn) broadcast intermediate
+    vmem = itemsize * (
+        2 * (bm * bk + bk * bn)
+        + (3 if seeded else 2) * bm * bn
+        + unroll * bm * bn
+    )
+    return Cost(
+        time_s=max(compute_s, hbm_s),
+        compute_s=compute_s,
+        hbm_s=hbm_s,
+        hbm_bytes=float(hbm_bytes),
+        vmem_bytes=vmem,
+    )
+
+
+def _tile_sizes(dim: int, *, cap: int = 512) -> list[int]:
+    """Power-of-two tile sizes dividing ``dim`` (plus ``dim`` itself when
+    nothing else divides it, so odd shapes still get a config)."""
+    sizes = [t for t in (8, 16, 32, 64, 128, 256, 512)
+             if t <= min(dim, cap) and dim % t == 0]
+    if not sizes or dim <= cap and dim not in sizes:
+        sizes.append(min(dim, cap) if dim % min(dim, cap) == 0 else dim)
+    return sorted(set(sizes))
+
+
+def candidates(m: int, n: int, k: int) -> Iterator[TileConfig]:
+    """Enumerate valid tile configs for an (m, n, k) problem: power-of-two
+    tiles dividing each dim, unrolls dividing bk, VMEM budget respected.
+    The (clamped) static default is always included."""
+    seen = set()
+    for bm in _tile_sizes(m):
+        for bn in _tile_sizes(n):
+            for bk in _tile_sizes(k):
+                for unroll in (1, 2, 4, 8, 16):
+                    if unroll > bk or bk % unroll:
+                        continue
+                    cfg = TileConfig(bm, bn, bk, unroll)
+                    if cfg not in seen:
+                        seen.add(cfg)
+                        yield cfg
+    dflt = clamp(DEFAULT, m, n, k)
+    if dflt not in seen and divides(dflt, m, n, k):
+        yield dflt
+
+
+@functools.lru_cache(maxsize=4096)
+def best_config(
+    op: str, m: int, n: int, k: int, *, itemsize: int = 4
+) -> tuple[TileConfig, Cost]:
+    """Sweep :func:`candidates` under :func:`modeled_cost` and return the
+    winner with its cost.  Cached in-process per (op, m, n, k, itemsize);
+    by construction the winner's modeled time never exceeds the static
+    default's (the default is part of the sweep)."""
+    best = None
+    fallback = None  # smallest-working-set candidate, if none fit budget
+    for cfg in candidates(m, n, k):
+        cost = modeled_cost(op, m, n, k, cfg, itemsize=itemsize)
+        fkey = (cost.vmem_bytes, cost.time_s)
+        if fallback is None or fkey < fallback[0]:
+            fallback = (fkey, cfg, cost)
+        if cost.vmem_bytes > VMEM_BUDGET:
+            continue
+        # tie-break toward larger tiles (fewer grid steps, less refetch)
+        key = (cost.time_s, (m // cfg.bm) * (n // cfg.bn) * (k // cfg.bk),
+               -(cfg.bm * cfg.bn))
+        if best is None or key < best[0]:
+            best = (key, cfg, cost)
+    if best is None:
+        # degenerate shape (e.g. no power-of-two divisor, whole-dim tiles
+        # only): every candidate busts the budget - return the smallest
+        # working set rather than a non-divisible config
+        best = fallback
+    return best[1], best[2]
+
+
+def default_config(m: int, n: int, k: int) -> TileConfig:
+    """The static default, clamped to the problem shape."""
+    return clamp(DEFAULT, m, n, k)
+
+
+def _parse_override(raw: str) -> TileConfig:
+    parts = raw.split(",")
+    if len(parts) != 4:
+        raise ValueError(
+            f"{ENV_TILES}={raw!r}: expected 'bm,bn,bk,unroll' "
+            "(four comma-separated ints)"
+        )
+    try:
+        bm, bn, bk, unroll = (int(p) for p in parts)
+    except ValueError as e:
+        raise ValueError(f"{ENV_TILES}={raw!r}: {e}") from None
+    if min(bm, bn, bk, unroll) < 1:
+        raise ValueError(f"{ENV_TILES}={raw!r}: tiles must be >= 1")
+    return TileConfig(bm, bn, bk, unroll)
+
+
+def tiles_for(op: str, m: int, n: int, k: int, *, itemsize: int = 4) -> dict:
+    """Resolve the tile kwargs for one fused-kernel launch.
+
+    This is the entry point :mod:`repro.kernels.ops` consults when the
+    caller did not pass explicit tiles.  Resolution order:
+
+    1. ``REPRO_MINPLUS_TILES=bm,bn,bk,unroll`` - pinned for every call.
+    2. ``REPRO_MINPLUS_AUTOTUNE=0`` - empty dict (kernels' static
+       defaults apply).
+    3. Otherwise the cached roofline sweep (:func:`best_config`).
+
+    Returns a dict suitable for ``**kwargs`` into the kernel wrappers.
+    """
+    raw = os.environ.get(ENV_TILES)
+    if raw:
+        return _parse_override(raw)._asdict()
+    if os.environ.get(ENV_AUTOTUNE, "1").lower() in ("0", "false", "off"):
+        return {}
+    cfg, _ = best_config(op, m, n, k, itemsize=itemsize)
+    return cfg._asdict()
+
+
+def clear_cache() -> None:
+    """Drop the in-process sweep cache (tests / constant hot-swapping)."""
+    best_config.cache_clear()

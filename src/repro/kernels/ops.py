@@ -1,22 +1,42 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On a TPU backend the Pallas kernels run natively; everywhere else (this
-container is CPU) they execute in interpret mode or fall back to the pure
-jnp references, selectable via ``mode``:
+This module is the single dispatch point between the Pallas kernels and
+their pure-jnp oracles (:mod:`repro.kernels.ref`), and the place where
+tile sizes are resolved and validated.  On a TPU backend the Pallas
+kernels run natively; everywhere else (this container is CPU) they
+execute in interpret mode or fall back to the references, selectable via
+``mode``:
 
   - "auto":     pallas on TPU, reference elsewhere (default; used by the
                 distributed paths so dry-run lowering stays pure-XLA)
   - "pallas":   force the Pallas kernel (interpret=True off-TPU) - used by
                 the kernel test suite
   - "ref":      force the jnp oracle
+
+Tile resolution for the tiled kernels (``minplus``, ``minplus_update``,
+and the Phase-2 panel kernels):
+
+  1. Explicit ``bm``/``bn``/``bk``/``unroll`` kwargs win and are
+     validated *up front* - a non-divisible tile raises a ``ValueError``
+     naming the offending dimension instead of surfacing as a raw
+     assertion from inside the Pallas trace.
+  2. Otherwise the three fused kernels consult the trace-time roofline
+     autotuner (:mod:`repro.kernels.autotune`: in-process cache, env
+     overrides ``REPRO_MINPLUS_TILES`` / ``REPRO_MINPLUS_AUTOTUNE=0``).
+  3. Plain ``minplus`` falls back to the kernels' static defaults.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels import ref as _ref
 from repro.kernels.floyd_warshall import floyd_warshall as _fw_pallas
 from repro.kernels.minplus import minplus as _mp_pallas
+from repro.kernels.minplus_panel import (
+    minplus_panel_col as _mpc_pallas,
+    minplus_panel_row as _mpr_pallas,
+)
 from repro.kernels.minplus_update import minplus_update as _mpu_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
 
@@ -36,7 +56,70 @@ def _resolve(mode: str) -> tuple[bool, bool]:
     raise ValueError(f"unknown kernel mode {mode!r}")
 
 
+def _validate_tiles(name: str, m: int, n: int, k: int, tile_kw: dict) -> None:
+    """Fail fast on bad tile overrides.
+
+    Mirrors the kernels' own clamping (``bm = min(bm, m)`` etc.) and then
+    checks divisibility, so an invalid override raises a clear
+    ``ValueError`` here instead of a raw assertion from inside the Pallas
+    trace.  Runs regardless of dispatch path so a bad override is caught
+    even where the reference implementation would silently ignore it.
+    """
+    unknown = set(tile_kw) - {"bm", "bn", "bk", "unroll"}
+    if unknown:
+        raise ValueError(
+            f"{name}: unknown tile kwargs {sorted(unknown)} "
+            "(expected bm/bn/bk/unroll)"
+        )
+    for key, val in tile_kw.items():
+        if not isinstance(val, int) or val < 1:
+            raise ValueError(
+                f"{name}: tile {key}={val!r} must be a positive int"
+            )
+    bm = min(tile_kw.get("bm", autotune.DEFAULT.bm), m)
+    bn = min(tile_kw.get("bn", autotune.DEFAULT.bn), n)
+    bk = min(tile_kw.get("bk", autotune.DEFAULT.bk), k)
+    unroll = min(tile_kw.get("unroll", autotune.DEFAULT.unroll), bk)
+    problems = []
+    if m % bm:
+        problems.append(f"bm={bm} does not divide m={m}")
+    if n % bn:
+        problems.append(f"bn={bn} does not divide n={n}")
+    if k % bk:
+        problems.append(f"bk={bk} does not divide k={k}")
+    if bk % unroll:
+        problems.append(f"unroll={unroll} does not divide bk={bk}")
+    if problems:
+        raise ValueError(
+            f"{name}: invalid tile override for ({m}, {n}) with "
+            f"contraction {k}: " + "; ".join(problems)
+        )
+
+
+def _tiles(op: str, m: int, n: int, k: int, tile_kw: dict) -> dict:
+    """Resolve the tile kwargs for one fused-kernel launch: validate any
+    explicit override, otherwise consult the autotuner."""
+    if tile_kw:
+        _validate_tiles(op, m, n, k, tile_kw)
+        return tile_kw
+    resolved = autotune.tiles_for(op, m, n, k)
+    if resolved:
+        # autotuned configs divide by construction; this guards the
+        # REPRO_MINPLUS_TILES env pin with the same clear error
+        _validate_tiles(op, m, n, k, resolved)
+    return resolved
+
+
 def minplus(a, b, *, mode: str = "auto", **tile_kw):
+    """Tropical (min-plus) matrix product C[i,j] = min_k A[i,k] + B[k,j].
+
+    a (m, k), b (k, n) -> (m, n).  Tile kwargs (bm/bn/bk/unroll) are
+    validated up front; without them the kernel's static defaults apply.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    if tile_kw:
+        _validate_tiles("minplus", m, n, k, tile_kw)
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
         return _mp_pallas(a, b, interpret=interpret, **tile_kw)
@@ -44,15 +127,61 @@ def minplus(a, b, *, mode: str = "auto", **tile_kw):
 
 
 def minplus_update(g, c, r, *, mode: str = "auto", **tile_kw):
-    """Fused Phase-3 relaxation: min(g, c (x) r) without the (m, n)
-    min-plus intermediate."""
+    """Fused Phase-3 relaxation O = min(G, C (x) R) without the (m, n)
+    min-plus intermediate.
+
+    g (m, n), c (m, k), r (k, n) -> (m, n).  The accumulator is seeded
+    from G's tile, so the product C (x) R never exists in HBM.  Tiles:
+    explicit kwargs win (validated up front), else the trace-time
+    autotuner picks per-shape (see :mod:`repro.kernels.autotune`).
+    """
+    m, n = g.shape
+    k = c.shape[1]
+    tile_kw = _tiles("minplus_update", m, n, k, tile_kw)
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
         return _mpu_pallas(g, c, r, interpret=interpret, **tile_kw)
     return _ref.minplus_update_ref(g, c, r)
 
 
+def minplus_panel_row(d, r, *, mode: str = "auto", **tile_kw):
+    """Fused Phase-2 row-panel update R' = min(R, D (x) R).
+
+    d (b, b) is the Floyd-Warshall-closed diagonal block, r (b, n) the
+    block row.  R is both the accumulator seed and the contraction
+    operand, so no (b, n) min-plus intermediate is materialized - the
+    update is in place at the tile level.  Bit-identical to
+    :func:`repro.kernels.ref.minplus_panel_row_ref` on every backend.
+    Tiles: explicit kwargs win (validated up front), else autotuned.
+    """
+    b, n = r.shape
+    tile_kw = _tiles("minplus_panel_row", b, n, b, tile_kw)
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _mpr_pallas(d, r, interpret=interpret, **tile_kw)
+    return _ref.minplus_panel_row_ref(d, r)
+
+
+def minplus_panel_col(c, d, *, mode: str = "auto", **tile_kw):
+    """Fused Phase-2 column-panel update C' = min(C, C (x) D).
+
+    c (m, b) is the block column, d (b, b) the Floyd-Warshall-closed
+    diagonal block.  C is both the accumulator seed and the contraction
+    operand, so no (m, b) min-plus intermediate is materialized.
+    Bit-identical to :func:`repro.kernels.ref.minplus_panel_col_ref` on
+    every backend.  Tiles: explicit kwargs win (validated up front),
+    else autotuned.
+    """
+    m, b = c.shape
+    tile_kw = _tiles("minplus_panel_col", m, b, b, tile_kw)
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _mpc_pallas(c, d, interpret=interpret, **tile_kw)
+    return _ref.minplus_panel_col_ref(c, d)
+
+
 def floyd_warshall(d, *, mode: str = "auto"):
+    """In-VMEM Floyd-Warshall closure of a dense (b, b) block (Phase 1)."""
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
         return _fw_pallas(d, interpret=interpret)
@@ -60,6 +189,7 @@ def floyd_warshall(d, *, mode: str = "auto"):
 
 
 def pairwise_sq_dists(x, y, *, mode: str = "auto", **tile_kw):
+    """Squared Euclidean distances between rows of x (m, D) and y (n, D)."""
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
         return _pd_pallas(x, y, interpret=interpret, **tile_kw)

@@ -72,6 +72,34 @@ def minplus_update_ref(
     return jax.lax.fori_loop(0, steps, body, g)
 
 
+def minplus_panel_row_ref(
+    d: jax.Array, r: jax.Array, *, chunk: int = 256
+) -> jax.Array:
+    """Fused Phase-2 row-panel oracle: R' = min(R, D (x) R).
+
+    d (b, b), r (b, n) -> (b, n).  Delegates to
+    :func:`minplus_update_ref` with R as both seed and contraction
+    operand - the accumulation is seeded from R, so no (b, n) product
+    intermediate exists, and because min is exact the result is
+    bit-identical to the Pallas panel kernel for any tiling.
+    """
+    b, b2 = d.shape
+    assert b == b2 == r.shape[0], (d.shape, r.shape)
+    return minplus_update_ref(r, d, r, chunk=chunk)
+
+
+def minplus_panel_col_ref(
+    c: jax.Array, d: jax.Array, *, chunk: int = 256
+) -> jax.Array:
+    """Fused Phase-2 column-panel oracle: C' = min(C, C (x) D).
+
+    c (m, b), d (b, b) -> (m, b).  See :func:`minplus_panel_row_ref`.
+    """
+    b, b2 = d.shape
+    assert b == b2 == c.shape[1], (c.shape, d.shape)
+    return minplus_update_ref(c, c, d, chunk=chunk)
+
+
 def floyd_warshall_ref(d: jax.Array) -> jax.Array:
     """In-block Floyd-Warshall: all-pairs shortest paths on a dense block.
 

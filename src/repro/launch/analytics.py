@@ -24,12 +24,13 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.model import build_model
 
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12          # bf16 FLOP/s (MXU)
-VPU_OPS = 3.9e12             # f32 elementwise ops/s (8x128 lanes x 4 ALUs
-                             # x ~0.94 GHz) - min-plus semiring ops run here,
-                             # NOT on the MXU (no tropical matmul in silicon)
-HBM_BW = 819e9               # B/s
+# TPU v5e constants (per chip); single source of truth is the kernel
+# tuner (repro.kernels.autotune) so the stage-level roofline and the
+# trace-time tile sweep can never disagree about the hardware.
+# VPU_OPS because min-plus semiring ops run on the VPU, NOT the MXU
+# (no tropical matmul in silicon).
+from repro.kernels.autotune import HBM_BW, PEAK_FLOPS, VPU_OPS  # noqa: E402
+
 ICI_BW = 2 * 50e9            # B/s per mesh axis (2 links per torus axis)
 
 

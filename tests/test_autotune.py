@@ -1,0 +1,115 @@
+"""Trace-time minplus tile autotuner: model sanity, cache behavior, env
+overrides, and the ops.py integration."""
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+
+
+def test_best_config_is_valid_and_beats_default():
+    for op in autotune.FUSED_OPS:
+        for m, n, k in ((256, 2048, 256), (128, 512, 128), (512, 512, 512)):
+            cfg, cost = autotune.best_config(op, m, n, k)
+            assert autotune.divides(cfg, m, n, k), (op, m, n, k, cfg)
+            assert cost.vmem_bytes <= autotune.VMEM_BUDGET
+            dflt = autotune.default_config(m, n, k)
+            dcost = autotune.modeled_cost(op, m, n, k, dflt)
+            assert cost.time_s <= dcost.time_s * (1.0 + 1e-9)
+
+
+def test_odd_shapes_get_a_config():
+    # shapes with no power-of-two divisor still resolve (whole-dim tile)
+    cfg, _ = autotune.best_config("minplus_update", 20, 20, 20)
+    assert autotune.divides(cfg, 20, 20, 20)
+    # ... even when the whole-dim tile busts the VMEM budget (the 700x700
+    # landmark sweep shape): the tuner must return a *valid* config, not
+    # a non-divisible clamped default
+    cfg, cost = autotune.best_config("minplus_update", 700, 700, 140)
+    assert autotune.divides(cfg, 700, 700, 140)
+    assert cost.vmem_bytes > 0
+
+
+def test_seeded_ops_cost_more_memory_than_minplus():
+    cfg = autotune.default_config(256, 256, 256)
+    seeded = autotune.modeled_cost("minplus_update", 256, 256, 256, cfg)
+    plain = autotune.modeled_cost("minplus", 256, 256, 256, cfg)
+    assert seeded.hbm_bytes == plain.hbm_bytes + 256 * 256 * 4
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError, match="unknown op"):
+        autotune.modeled_cost("matmul", 8, 8, 8, autotune.DEFAULT)
+
+
+def test_sweep_is_cached():
+    autotune.clear_cache()
+    autotune.best_config("minplus_update", 384, 384, 384)
+    first = autotune.best_config.cache_info()
+    assert first.misses >= 1
+    autotune.best_config("minplus_update", 384, 384, 384)
+    second = autotune.best_config.cache_info()
+    assert second.hits == first.hits + 1
+    assert second.misses == first.misses
+
+
+def test_env_tile_override(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_TILES, "32,32,32,4")
+    assert autotune.tiles_for("minplus_update", 256, 256, 256) == {
+        "bm": 32, "bn": 32, "bk": 32, "unroll": 4,
+    }
+    monkeypatch.setenv(autotune.ENV_TILES, "32,32,32")
+    with pytest.raises(ValueError, match="four comma-separated ints"):
+        autotune.tiles_for("minplus_update", 256, 256, 256)
+    monkeypatch.setenv(autotune.ENV_TILES, "32,32,32,x")
+    with pytest.raises(ValueError):
+        autotune.tiles_for("minplus_update", 256, 256, 256)
+    monkeypatch.setenv(autotune.ENV_TILES, "32,32,0,4")
+    with pytest.raises(ValueError, match=">= 1"):
+        autotune.tiles_for("minplus_update", 256, 256, 256)
+
+
+def test_env_autotune_disable(monkeypatch):
+    monkeypatch.delenv(autotune.ENV_TILES, raising=False)
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "0")
+    assert autotune.tiles_for("minplus_update", 256, 2048, 256) == {}
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "1")
+    assert autotune.tiles_for("minplus_update", 256, 2048, 256)
+
+
+def test_ops_uses_autotuned_tiles_and_stays_exact(rng):
+    """mode='pallas' with autotuned tiles must stay bit-identical to the
+    oracle - the tuner may only change the schedule, never the result."""
+    d = np.asarray(
+        ref.floyd_warshall_ref(rng.uniform(1, 10, (64, 64)).astype(np.float32))
+    )
+    r = rng.uniform(0, 30, (64, 256)).astype(np.float32)
+    got = ops.minplus_panel_row(d, r, mode="pallas")
+    assert np.array_equal(
+        np.asarray(got), np.asarray(ref.minplus_panel_row_ref(d, r))
+    )
+    g = rng.uniform(0, 30, (128, 128)).astype(np.float32)
+    c = rng.uniform(0, 10, (128, 64)).astype(np.float32)
+    rr = rng.uniform(0, 10, (64, 128)).astype(np.float32)
+    got = ops.minplus_update(g, c, rr, mode="pallas")
+    assert np.array_equal(
+        np.asarray(got), np.asarray(ref.minplus_update_ref(g, c, rr))
+    )
+
+
+def test_env_override_reaches_kernel_validation(rng, monkeypatch):
+    """A pinned non-divisible tile fails fast with the ops.py ValueError,
+    not a Pallas trace assertion."""
+    g = rng.uniform(0, 10, (64, 64)).astype(np.float32)
+    monkeypatch.setenv(autotune.ENV_TILES, "48,32,32,4")
+    with pytest.raises(ValueError, match="does not divide"):
+        ops.minplus_update(g, g, g, mode="pallas")
+
+
+def test_constants_are_shared_with_launch_rooflines():
+    """The stage-level roofline models must read the tuner's machine
+    constants (single source of truth)."""
+    from repro.launch import analytics
+
+    assert analytics.VPU_OPS is autotune.VPU_OPS
+    assert analytics.HBM_BW is autotune.HBM_BW
+    assert analytics.PEAK_FLOPS is autotune.PEAK_FLOPS

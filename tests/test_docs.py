@@ -1,0 +1,41 @@
+"""The documentation surface exists and its commands parse.
+
+The CI docs job additionally runs every documented CLI's --help and the
+apsp_phase2 bench; here we keep the cheap invariants in tier-1 so a doc
+regression fails fast everywhere.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_docs_exist():
+    for rel in ("README.md", "docs/architecture.md", "docs/kernels.md"):
+        path = os.path.join(REPO, rel)
+        assert os.path.isfile(path), f"missing {rel}"
+        with open(path, encoding="utf-8") as f:
+            assert len(f.read()) > 500, f"{rel} is a stub"
+
+
+def test_documented_commands_parse():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "check_docs.py"),
+         "--no-exec"],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_readme_relative_links_resolve():
+    import re
+
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
+        text = f.read()
+    for target in re.findall(r"\]\(([^)#]+)\)", text):
+        if "://" in target:
+            continue
+        assert os.path.exists(os.path.join(REPO, target)), (
+            f"README links to missing path {target!r}"
+        )

@@ -7,6 +7,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.minplus import minplus as mp_pallas
+from repro.kernels.minplus_panel import (
+    minplus_panel_col as mpc_pallas,
+    minplus_panel_row as mpr_pallas,
+)
 from repro.kernels.floyd_warshall import floyd_warshall as fw_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as pd_pallas
 
@@ -37,6 +41,107 @@ def test_minplus_with_inf(rng):
     want = np.min(a[:, :, None] + b[None, :, :], axis=1)
     got = mp_pallas(a, b, bm=32, bn=32, bk=32, unroll=4, interpret=True)
     np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def _closed_diag_block(rng, b):
+    """A Floyd-Warshall-closed (b, b) block (zero diagonal), as Phase 2
+    sees the diagonal block."""
+    d = rng.uniform(1, 10, (b, b)).astype(np.float32)
+    return np.asarray(ref.floyd_warshall_ref(d))
+
+
+@pytest.mark.parametrize(
+    "b,n,bm,bn,bk,unroll",
+    [
+        (32, 32, 32, 32, 32, 4),
+        (64, 192, 32, 64, 32, 8),
+        (128, 128, 64, 128, 128, 16),
+        (8, 8, 8, 8, 8, 1),
+    ],
+)
+def test_minplus_panel_row_matches_ref(b, n, bm, bn, bk, unroll, rng):
+    d = _closed_diag_block(rng, b)
+    r = rng.uniform(0, 30, (b, n)).astype(np.float32)
+    want = np.minimum(r, np.min(d[:, :, None] + r[None, :, :], axis=1))
+    got = mpr_pallas(d, r, bm=bm, bn=bn, bk=bk, unroll=unroll,
+                     interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # bit-identical to the oracle (min is exact): the acceptance contract
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(ref.minplus_panel_row_ref(d, r)))
+
+
+@pytest.mark.parametrize(
+    "m,b,bm,bn,bk,unroll",
+    [
+        (32, 32, 32, 32, 32, 4),
+        (192, 64, 64, 32, 64, 8),
+        (128, 128, 128, 64, 32, 2),
+        (8, 8, 8, 8, 8, 1),
+    ],
+)
+def test_minplus_panel_col_matches_ref(m, b, bm, bn, bk, unroll, rng):
+    d = _closed_diag_block(rng, b)
+    c = rng.uniform(0, 30, (m, b)).astype(np.float32)
+    want = np.minimum(c, np.min(c[:, :, None] + d[None, :, :], axis=1))
+    got = mpc_pallas(c, d, bm=bm, bn=bn, bk=bk, unroll=unroll,
+                     interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(ref.minplus_panel_col_ref(c, d)))
+
+
+def test_minplus_panel_with_inf(rng):
+    """+inf (missing edges) must ride through the fused panels."""
+    d = _closed_diag_block(rng, 32)
+    r = rng.uniform(0, 5, (32, 64)).astype(np.float32)
+    r[r < 1.0] = np.inf
+    want = np.minimum(r, np.min(d[:, :, None] + r[None, :, :], axis=1))
+    got = mpr_pallas(d, r, bm=32, bn=32, bk=32, unroll=4, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_panel_equals_materializing_composition(rng):
+    """min(R, D (x) R) fused == the materializing two-step, bit for bit,
+    through the ops dispatch on every mode that executes here."""
+    d = _closed_diag_block(rng, 64)
+    r = rng.uniform(0, 30, (64, 128)).astype(np.float32)
+    c = rng.uniform(0, 30, (128, 64)).astype(np.float32)
+    for mode in ("auto", "ref", "pallas"):
+        row = ops.minplus_panel_row(d, r, mode=mode)
+        col = ops.minplus_panel_col(c, d, mode=mode)
+        assert np.array_equal(
+            np.asarray(row),
+            np.asarray(jnp.minimum(r, ops.minplus(d, r, mode=mode))),
+        )
+        assert np.array_equal(
+            np.asarray(col),
+            np.asarray(jnp.minimum(c, ops.minplus(c, d, mode=mode))),
+        )
+
+
+def test_tile_override_validation(rng):
+    """Bad tile overrides raise a clear ValueError from ops.py, not a raw
+    Pallas trace assertion - on every op that takes tiles, including the
+    ref path (which would otherwise silently ignore them)."""
+    g = rng.uniform(0, 10, (64, 64)).astype(np.float32)
+    with pytest.raises(ValueError, match="bm=48 does not divide m=64"):
+        ops.minplus_update(g, g, g, bm=48)
+    with pytest.raises(ValueError, match="bn=24 does not divide n=64"):
+        ops.minplus_panel_row(g, g, mode="ref", bn=24)
+    with pytest.raises(ValueError, match="bk=40 does not divide k=64"):
+        ops.minplus_panel_col(g, g, mode="ref", bk=40)
+    with pytest.raises(ValueError, match="unroll=24 does not divide"):
+        ops.minplus(g, g, bk=64, unroll=24)
+    with pytest.raises(ValueError, match="unknown tile kwargs"):
+        ops.minplus_update(g, g, g, block=32)
+    with pytest.raises(ValueError, match="must be a positive int"):
+        ops.minplus_update(g, g, g, bm=0)
+    # valid overrides still go through (clamped like the kernels clamp)
+    out = ops.minplus_update(g, g, g, bm=128, bn=32, bk=16, unroll=8)
+    assert np.array_equal(
+        np.asarray(out), np.asarray(ref.minplus_update_ref(g, g, g))
+    )
 
 
 @pytest.mark.parametrize("n", [8, 32, 64, 128])
