@@ -16,6 +16,13 @@ on either pipeline backend:
     import).
 
 ``--smoke`` shrinks sizes so CI exercises the queue scheduler in seconds.
+
+``--absorb`` runs the streaming-absorb smoke instead of the rate sweep:
+serve -> absorb through the service write path -> serve again, asserting
+that reads complete while the absorb is in flight without serializing
+behind it, that post-absorb queries are answered from the grown base,
+and that the grown geodesics match refitting exact Isomap on base ∪
+accepted (same neighbourhood structure) within 1e-5.
 """
 from __future__ import annotations
 
@@ -43,27 +50,27 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="tiny sizes + local-friendly rates for CI")
+    ap.add_argument("--absorb", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="run the streaming-absorb smoke "
+                         "(serve -> absorb -> serve) instead of the sweep")
     return ap
 
 
-def run(args) -> list[dict]:
+def _fit(args):
+    """Fit the base manifold on the requested backend; returns
+    (x_base, x_stream, backend, art, n_base, n_stream)."""
     import jax.numpy as jnp
     import numpy as np
 
     from repro.core.pipeline import (
         LocalBackend, ManifoldPipeline, MeshBackend, PipelineConfig,
     )
-    from repro.core.streaming import StreamingMapper
     from repro.data import euler_isometric_swiss_roll
-    from repro.launch.serving import BatchedMapperService
 
     n_base, n_stream = args.n_base, args.n_stream
-    rates = args.rates
     if args.smoke:
         n_base, n_stream = 256, 96
-        rates = rates if rates is not None else [0.0]
-    elif rates is None:
-        rates = [500.0, 2000.0, 0.0]
 
     x, _ = euler_isometric_swiss_roll(n_base + n_stream, seed=args.seed)
     if args.backend == "mesh":
@@ -96,6 +103,176 @@ def run(args) -> list[dict]:
     fit_s = time.perf_counter() - t0
     print(f"# fit backend={args.backend} n_base={n_base} "
           f"fit_s={fit_s:.2f}", file=sys.stderr)
+    return x_base, x_stream, backend, art, n_base, n_stream
+
+
+def run_absorb_smoke(args) -> dict:
+    """serve -> absorb -> serve through one BatchedMapperService.
+
+    Asserted, not just reported:
+
+    * reads submitted before and alongside the absorb all complete, and
+      are not serialized behind the write path: collecting them takes a
+      small fraction of the time the absorb is in flight (the absorb
+      runs between flushes against a versioned snapshot);
+    * the absorb actually grew the served base (version bump + n_base);
+    * post-absorb queries are answered from the grown base: they match a
+      fresh mapper built directly on refit artifacts (exact Isomap on
+      base ∪ accepted with the same neighbourhood structure) within 1e-5;
+    * the grown geodesics match that refit within 1e-5.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import apsp as apsp_mod
+    from repro.core import update as update_mod
+    from repro.core.postprocess import embedding_from_eig
+    from repro.core.streaming import StreamingMapper
+    from repro.launch.serving import BatchedMapperService
+
+    x_base, x_stream, backend, art, n_base, n_stream = _fit(args)
+    n_absorb = 16
+    x_absorb, x_query = x_stream[:n_absorb], x_stream[n_absorb:]
+
+    mapper = StreamingMapper.from_artifacts(
+        art, k=args.k, batch=args.max_batch, backend=backend
+    )
+    service = BatchedMapperService(
+        mapper, max_batch=args.max_batch,
+        max_latency_ms=args.max_latency_ms,
+    )
+    with service:
+        service.warmup(x_stream.shape[1])
+        # phase 1: serve, and interleave the absorb with live reads
+        t0 = time.perf_counter()
+        pre = [service.submit(x_query[i]) for i in range(16)]
+        absorb_fut = service.submit_absorb(x_absorb)
+        mid = [service.submit(x_query[16 + i]) for i in range(16)]
+        for f in pre + mid:
+            assert f.result(timeout=60) is not None
+        read_s = time.perf_counter() - t0
+        report = absorb_fut.result(timeout=120)
+        absorb_wall_s = time.perf_counter() - t0
+        # reads must not have waited for the O(n^2) expansion: with the
+        # queue non-empty the scheduler flushes reads first, so the read
+        # wave completes in a fraction of the absorb's wall time (0.5s
+        # floor keeps the check meaningful only when the absorb is slow
+        # enough to matter)
+        assert read_s < max(0.5 * absorb_wall_s, 0.5), (
+            f"reads took {read_s:.2f}s while the absorb was in flight "
+            f"for {absorb_wall_s:.2f}s - the read path serialized "
+            "behind the write path"
+        )
+        # phase 2: post-absorb reads come from the grown base
+        post = [service.submit(p) for p in x_query[32:]]
+        y_post = np.concatenate([f.result(timeout=60) for f in post])
+    stats = service.stats()
+
+    assert report.absorbed > 0, report
+    assert mapper.version >= 1, mapper.version
+    assert mapper.n_base == n_base + report.absorbed, (
+        mapper.n_base, n_base, report.absorbed
+    )
+
+    # fusion discipline (--only apsp_phase2 contract), asserted on the
+    # expansion path the absorb actually ran: local inspects the fused
+    # expand_geodesics for (n, n)-shaped product intermediates; mesh
+    # inspects the shard body for tile-shaped ones - both against their
+    # materializing twins
+    import jax
+
+    from run import _shaped_vars
+
+    mm = report.absorbed
+    az = jnp.zeros((n_base, n_base), jnp.float32)
+    ez = jnp.zeros((mm, n_base), jnp.float32)
+    fz = jnp.zeros((mm, mm), jnp.float32)
+    if args.backend == "mesh":
+        pd = backend.mesh.shape[backend.data_axis]
+        pm = backend.mesh.shape[backend.model_axis]
+        shape = (n_base // pd, n_base // pm)   # the local interior tile
+        fused_fn = update_mod.make_expand_sharded(
+            backend.mesh, n_base, mm,
+            data_axis=backend.data_axis, model_axis=backend.model_axis,
+        )
+        mat_fn = update_mod.make_expand_sharded(
+            backend.mesh, n_base, mm,
+            data_axis=backend.data_axis, model_axis=backend.model_axis,
+            fused=False,
+        )
+    else:
+        shape = (n_base, n_base)
+        fused_fn = update_mod.expand_geodesics
+        mat_fn = update_mod.expand_geodesics_materializing
+    n_fused = _shaped_vars(jax.make_jaxpr(fused_fn)(az, ez, fz), shape)
+    n_mat = _shaped_vars(jax.make_jaxpr(mat_fn)(az, ez, fz), shape)
+    assert n_fused < n_mat, (
+        f"border expansion carries {n_fused} {shape}-shaped jaxpr vars "
+        f"vs {n_mat} materializing - a min-plus intermediate is back"
+    )
+
+    # refit oracle: exact Isomap on base ∪ accepted with the same
+    # (augmented) neighbourhood structure, from scratch
+    from repro.core.update import UpdateConfig
+
+    threshold = UpdateConfig().threshold   # the gate the service used
+    accepted = x_absorb[report.errors <= threshold][: report.absorbed]
+    m = accepted.shape[0]
+    g_aug = update_mod.augmented_graph(
+        np.asarray(x_base), accepted, k=args.k
+    )
+    want_geo = np.asarray(
+        apsp_mod.apsp_blocked(jnp.asarray(g_aug), block=n_base + m,
+                              mode="ref")
+    )
+    got_geo = np.asarray(mapper.geodesics)
+    np.testing.assert_allclose(got_geo, want_geo, rtol=1e-5, atol=1e-5)
+
+    # post-absorb queries match a mapper built directly on the refit
+    from repro.core.centering import double_center
+    from repro.core.spectral import power_iteration
+
+    eig = power_iteration(
+        double_center(jnp.square(jnp.asarray(want_geo))), d=2,
+        max_iter=100, tol=1e-9,
+    )
+    y_refit = embedding_from_eig(eig.eigenvectors, eig.eigenvalues)
+    x_grown = np.concatenate([np.asarray(x_base), accepted])
+    refit_mapper = StreamingMapper(
+        jnp.asarray(x_grown), jnp.asarray(want_geo), y_refit, k=args.k,
+        batch=args.max_batch,
+    )
+    want_post = np.asarray(refit_mapper(jnp.asarray(x_query[32:])))
+    # eigenvector sign is arbitrary: align each embedding column before
+    # comparing the triangulated coordinates
+    sign = np.sign(np.sum(y_post * want_post, axis=0))
+    np.testing.assert_allclose(y_post, want_post * sign, rtol=1e-4,
+                               atol=1e-4)
+
+    row = {
+        "backend": args.backend,
+        "absorbed": report.absorbed,
+        "version": mapper.version,
+        "reads_during_absorb_s": read_s,
+        "p50_ms": stats["latency_p50_ms"],
+        "p99_ms": stats["latency_p99_ms"],
+    }
+    print("backend,absorbed,version,reads_during_absorb_s,p50_ms,p99_ms")
+    print(",".join(str(row[c]) for c in row))
+    return row
+
+
+def run(args) -> list[dict]:
+    from repro.core.streaming import StreamingMapper
+    from repro.launch.serving import BatchedMapperService
+
+    rates = args.rates
+    if args.smoke:
+        rates = rates if rates is not None else [0.0]
+    elif rates is None:
+        rates = [500.0, 2000.0, 0.0]
+
+    x_base, x_stream, backend, art, n_base, n_stream = _fit(args)
 
     mapper = StreamingMapper.from_artifacts(
         art, k=args.k, batch=args.max_batch, backend=backend
@@ -146,6 +323,8 @@ def main(argv=None):
     if args.backend == "mesh" and "XLA_FLAGS" not in os.environ:
         # must happen before any jax import in this process
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    if args.absorb:
+        return run_absorb_smoke(args)
     print("backend,rate_pts_s,offered,p50_ms,p99_ms,mean_batch,"
           "sustained_pts_s")
     rows = run(args)

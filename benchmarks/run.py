@@ -128,7 +128,9 @@ def _shaped_vars(jaxpr, shape) -> int:
                 subs = sub if isinstance(sub, (list, tuple)) else (sub,)
                 for s in subs:
                     if hasattr(s, "jaxpr"):
-                        walk(s.jaxpr)
+                        walk(s.jaxpr)        # ClosedJaxpr (jit, loops)
+                    elif hasattr(s, "eqns"):
+                        walk(s)              # raw Jaxpr (shard_map body)
 
     walk(jaxpr.jaxpr)
     return count
@@ -198,12 +200,58 @@ def bench_apsp_phase2(smoke: bool = False):
             f"fused={n_fused}_materializing={n_mat}",
         )
 
+    # border expansion (the absorb path): same fusion discipline - the
+    # grown system's interior/border updates must materialize no min-plus
+    # intermediate, (n, n) or panel-shaped
+    from repro.core.update import (
+        expand_geodesics, expand_geodesics_materializing,
+    )
+
+    m = b // 2
+    e = jnp.asarray(rng.uniform(0, 30, (m, n)), jnp.float32)
+    f_new = jnp.asarray(rng.uniform(0, 10, (m, m)), jnp.float32)
+    f_new = jnp.minimum(f_new, f_new.T)
+    f_new = jnp.where(jnp.eye(m, dtype=bool), 0.0, f_new)
+    a_base = jnp.asarray(rng.uniform(0, 30, (n, n)), jnp.float32)
+    a_base = jnp.minimum(a_base, a_base.T)
+    a_base = jnp.where(jnp.eye(n, dtype=bool), 0.0, a_base)
+
+    def fused_expand():
+        return expand_geodesics(a_base, e, f_new, mode=mode)
+
+    def materializing_expand():
+        return expand_geodesics_materializing(a_base, e, f_new, mode=mode)
+
+    got, want = np.asarray(fused_expand()), np.asarray(materializing_expand())
+    assert np.array_equal(got, want), (
+        "fused border expansion is not bit-identical to the "
+        "materializing composition"
+    )
+    n_fused = _shaped_vars(jax.make_jaxpr(fused_expand)(), (n, n))
+    n_mat = _shaped_vars(jax.make_jaxpr(materializing_expand)(), (n, n))
+    assert n_fused < n_mat, (
+        f"border expansion: fused path has {n_fused} (n, n)-shaped "
+        f"intermediates vs materializing {n_mat} - the (n, n) min-plus "
+        "intermediate is back"
+    )
+    t_fused = _timeit(fused_expand, repeats=2)
+    t_mat = _timeit(materializing_expand, repeats=2)
+    _row(
+        f"apsp2_border_fused_m{m}_n{n}", t_fused,
+        f"{t_mat / t_fused:.2f}x_vs_materializing",
+    )
+    _row(
+        f"apsp2_border_intermediates", 0.0,
+        f"fused={n_fused}_materializing={n_mat}",
+    )
+
     # trace-time autotune: modeled time of the chosen config vs the
-    # static default for all three fused kernels at this problem shape
+    # static default for all fused kernels at this problem shape
     shapes = {
         "minplus_panel_row": (b, n, b),
         "minplus_panel_col": (n, b, b),
         "minplus_update": (n, n, b),
+        "minplus_border": (m, n, n),
     }
     for op, (m_, n_, k_) in shapes.items():
         cfg, cost = autotune.best_config(op, m_, n_, k_)
@@ -261,15 +309,21 @@ def bench_spectral():
         _row(f"spectral_d{d}", t, f"iters={int(eig.iterations)}")
 
 
-def bench_pipeline():
+def bench_pipeline(checkpoint_secs: float | None = None):
     """Staged ManifoldPipeline end-to-end + streaming serve throughput +
     checkpoint-payload discipline (liveness pruning keeps every boundary
-    O(n^2), asserted, not just reported)."""
+    O(n^2), asserted, not just reported).
+
+    checkpoint_secs: size the APSP panel segments of the checkpointed run
+    from this wall-clock target (measured per-panel time) instead of one
+    segment per stage - the knob ``--checkpoint-secs`` exposes."""
     import os
     import tempfile
 
     from repro.checkpoint import CheckpointManager
-    from repro.core.pipeline import ManifoldPipeline, PipelineConfig
+    from repro.core.pipeline import (
+        LocalBackend, ManifoldPipeline, PipelineConfig,
+    )
     from repro.core.streaming import StreamingMapper
     from repro.data import euler_isometric_swiss_roll
 
@@ -299,7 +353,8 @@ def bench_pipeline():
     with tempfile.TemporaryDirectory() as td:
         mgr = CheckpointManager(td, keep=100)
         ckpt_pipe = ManifoldPipeline(
-            cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr
+            cfg=PipelineConfig(k=10, d=2, block=128), checkpoint=mgr,
+            backend=LocalBackend(checkpoint_secs=checkpoint_secs),
         )
         ckpt_pipe.run(x_base)
         nn_bytes = n * n * 4
@@ -406,15 +461,24 @@ def main() -> None:
         "--smoke", action="store_true",
         help="shrink problem sizes for CI (groups that support it)",
     )
+    ap.add_argument(
+        "--checkpoint-secs", type=float, default=None,
+        help="target wall-clock interval between mid-stage checkpoints "
+        "for the checkpointed pipeline bench (segment sizes derived from "
+        "measured per-unit time)",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in _BENCHES.items():
         if args.only and name not in args.only:
             continue
-        if "smoke" in inspect.signature(fn).parameters:
-            fn(smoke=args.smoke)
-        else:
-            fn()
+        kwargs = {}
+        params = inspect.signature(fn).parameters
+        if "smoke" in params:
+            kwargs["smoke"] = args.smoke
+        if "checkpoint_secs" in params:
+            kwargs["checkpoint_secs"] = args.checkpoint_secs
+        fn(**kwargs)
 
 
 if __name__ == "__main__":

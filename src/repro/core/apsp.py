@@ -116,7 +116,8 @@ def _apsp_shard_body(
     paper's one-block-one-task mapping).  When set, each rank computes a
     1/p slice of the panel and the group all-gathers the result - panel
     FLOPs drop p-fold for one extra (b x n/p) gather per iteration (see
-    EXPERIMENTS.md SPerf, apsp iteration 1).
+    EXPERIMENTS.md SPerf, apsp iteration 1).  Callers leaving it unset
+    get the roofline decision (:func:`repro.kernels.ops.auto_split_panels`).
     """
     di = folded_axis_index(data_axis)
     mi = folded_axis_index(model_axis)
@@ -179,14 +180,20 @@ def make_apsp_segment(
     data_axis: str = "data",
     model_axis: str = "model",
     mode: str = "auto",
-    split_panels: bool = False,
+    split_panels: bool | None = None,
 ):
     """Build segment_fn(g, lo, hi) -> g running APSP iterations [lo, hi).
 
     g is the (n, n) matrix sharded P(data_axis, model_axis).  Segments let
     the caller checkpoint between them (fault-tolerance unit).
+
+    split_panels: None (default) consults the roofline decision in
+    :func:`repro.kernels.ops.auto_split_panels` (env-pinnable via
+    ``REPRO_SPLIT_PANELS``); True/False pin it at the call site.
     """
     pd, pm = mesh_axis_size(mesh, data_axis), mesh_axis_size(mesh, model_axis)
+    if split_panels is None:
+        split_panels = ops.auto_split_panels(n, b, pd, pm)
     nr, nc = n // pd, n // pm
     assert n % pd == 0 and n % pm == 0
     assert nr % b == 0 or b % nr == 0
@@ -221,7 +228,7 @@ def cached_apsp_segment(
     data_axis: str = "data",
     model_axis: str = "model",
     mode: str = "auto",
-    split_panels: bool = False,
+    split_panels: bool | None = None,
 ):
     """:func:`make_apsp_segment` memoized per (mesh, n, b, ...) so the
     pipeline engine can request the segment fn once per segment without
@@ -242,7 +249,7 @@ def apsp_sharded(
     mode: str = "auto",
     data_axis: str = "data",
     model_axis: str = "model",
-    split_panels: bool = False,
+    split_panels: bool | None = None,
 ):
     """Distributed APSP over the production mesh.
 

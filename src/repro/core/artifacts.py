@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections.abc import Mapping
-from typing import Any, Iterator
+from typing import Any, Iterator, Sequence
 
 # Canonical mesh-role names used in recorded placements.  Backends map
 # their actual axis names onto these at save time and back at restore
@@ -117,6 +117,74 @@ class ArtifactStore(Mapping):
 
     def placements(self) -> dict[str, list | None]:
         return {k: r.placement for k, r in self._records.items()}
+
+    # -------------------------------------------------------- versioning --
+
+    def versioned(self, keys: "Sequence[str] | None" = None
+                  ) -> "VersionedArtifacts":
+        """Snapshot (a subset of) this store into a
+        :class:`VersionedArtifacts` publication point - the handoff from
+        "fit once" to "serve and update": the pipeline's exported
+        artifacts become version 0, and each absorbed stream batch
+        republishes a new version atomically while readers keep serving
+        the old one."""
+        names = list(keys) if keys is not None else list(self._records)
+        missing = [k for k in names if k not in self._records]
+        if missing:
+            raise KeyError(
+                f"artifacts {missing} not in store ({sorted(self._records)})"
+            )
+        return VersionedArtifacts({k: self._records[k].value for k in names})
+
+
+# ------------------------------------------------- versioned publication ----
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactVersion:
+    """One immutable published generation of serving artifacts."""
+
+    version: int
+    artifacts: Mapping
+
+    def __getitem__(self, name: str) -> Any:
+        return self.artifacts[name]
+
+
+class VersionedArtifacts:
+    """Atomic publish/read point for serving artifacts.
+
+    The updatable-manifold path (:mod:`repro.core.update`) regrows
+    ``x``/``geodesics``/``embedding`` while queries are being served from
+    them.  This class makes that safe without a reader lock: ``current``
+    is a single attribute read returning one immutable
+    :class:`ArtifactVersion` (readers that captured a version keep a
+    consistent snapshot for the whole request), and :meth:`publish` swaps
+    the pointer in one reference assignment - writers never mutate a
+    published generation, so a reader can never observe a half-updated
+    ``geodesics``/``embedding`` pair.
+    """
+
+    def __init__(self, base: Mapping, *, version: int = 0) -> None:
+        self._current = ArtifactVersion(version, dict(base))
+
+    @property
+    def current(self) -> ArtifactVersion:
+        """The newest published generation (lock-free snapshot read)."""
+        return self._current
+
+    @property
+    def version(self) -> int:
+        return self._current.version
+
+    def publish(self, updates: Mapping) -> ArtifactVersion:
+        """Publish a new generation: the previous artifacts overlaid with
+        `updates`, version bumped by one.  The swap is a single reference
+        assignment; in-flight readers keep the generation they captured."""
+        cur = self._current
+        nxt = ArtifactVersion(cur.version + 1, {**cur.artifacts, **updates})
+        self._current = nxt
+        return nxt
 
 
 # ------------------------------------------------- placement spec codec ----

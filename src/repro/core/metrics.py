@@ -1,9 +1,22 @@
-"""Quality metrics for manifold learning (paper SIV-A).
+"""Quality metrics for manifold learning (paper SIV-A) and the streaming
+acceptance test.
 
 Procrustes error: dissimilarity after the optimal similarity transform
 (translation + rotation/reflection + isotropic scale) of X onto Y - the
 measure the paper reports (2.6741e-5 on Swiss50).  Matches
 scipy.spatial.procrustes semantics.
+
+Streaming mapping error: the per-arrival reliability measure in the
+spirit of Schoeneman et al., *Error Metrics for Learning Reliable
+Manifolds from Streaming Data* (arXiv:1611.04067) - rather than
+re-embedding to measure a global Procrustes disparity, each streamed
+point is scored by how isometrically its local neighbourhood maps: the
+discrepancy between its distances to its k anchor points and the
+corresponding distances in the embedding, normalized by the manifold's
+geodesic scale.  Points that map near-isometrically lie on the learned
+manifold and are safe to fold back into the base geodesics
+(:mod:`repro.core.update`); high-error points are off-manifold (or the
+manifold is under-sampled there) and are served but not absorbed.
 """
 from __future__ import annotations
 
@@ -23,6 +36,30 @@ def procrustes_error(x: jax.Array, y: jax.Array) -> jax.Array:
     u, s, vt = jnp.linalg.svd(x.T @ y)
     # optimal rotation of x onto y; disparity = 1 - (sum s)^2
     return 1.0 - jnp.sum(s) ** 2
+
+
+@jax.jit
+def stream_mapping_error(
+    anchor_d: jax.Array,   # (m, k) distances from each arrival to anchors
+    y_new: jax.Array,      # (m, d) mapped coordinates of the arrivals
+    y_anchors: jax.Array,  # (m, k, d) embedding coords of the anchors
+    scale: jax.Array,      # scalar: RMS geodesic scale of the base fit
+) -> jax.Array:
+    """Per-arrival streaming reliability score (Schoeneman-style).
+
+    For each streamed point: the RMS discrepancy between its anchor
+    distances and its embedded distances to those anchors, normalized by
+    the base manifold's RMS geodesic scale (so the threshold is
+    dimensionless and stable across datasets).  Returns (m,) errors;
+    the absorb gate accepts ``err <= threshold``.
+    """
+    d_emb = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum((y_new[:, None, :] - y_anchors) ** 2, axis=-1), 0.0
+        )
+    )                                                   # (m, k)
+    resid = jnp.sqrt(jnp.mean(jnp.square(d_emb - anchor_d), axis=1))
+    return resid / jnp.maximum(scale, 1e-12)
 
 
 @jax.jit

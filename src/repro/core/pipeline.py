@@ -60,7 +60,11 @@ mapper (:class:`repro.core.streaming.StreamingMapper`) serves new-point
 queries straight from a fitted pipeline's exported ``geodesics`` +
 ``embedding`` artifacts (Schoeneman et al.'s stream/batch combination
 point), and :mod:`repro.launch.serving` provides the batched
-request/response surface in front of it.
+request/response surface in front of it.  The serving state is also
+*updatable*: both backends implement the border-expansion hooks
+(``expand_geodesics`` / ``place_rows`` / ``absorb_multiple``) that
+:mod:`repro.core.update` uses to fold accepted stream arrivals back into
+the geodesic system without a refit.
 
 LLE registers its own tail stages (``lle_weights``, ``lle_eigen``) behind
 the shared ``knn`` stage - the paper's "extends to other spectral methods
@@ -70,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
 import jax
@@ -115,12 +120,26 @@ class LocalBackend:
 
     segment: optional unit count per segment for ResumableStages (None =
     run each stage's inner loop in one shot); mirrors MeshBackend.
+    checkpoint_secs: when `segment` is unset, derive it from this target
+    checkpoint interval (seconds) using the measured time of the stage's
+    first unit - the wall-clock analogue of the paper's
+    every-10-iterations cadence (see ManifoldPipeline._run_resumable).
     """
 
     kind = "local"
 
-    def __init__(self, *, segment: int | None = None):
+    #: arrival-batch granularity for geodesic absorbs (any size works on
+    #: one device)
+    absorb_multiple = 1
+
+    def __init__(
+        self,
+        *,
+        segment: int | None = None,
+        checkpoint_secs: float | None = None,
+    ):
         self.segment = segment
+        self.checkpoint_secs = checkpoint_secs
 
     def knn(self, cfg: PipelineConfig, x):
         n = x.shape[0]
@@ -189,6 +208,17 @@ class LocalBackend:
             x_new, x_base, geodesics, embedding, k=k, mean_sq=mean_sq
         )
 
+    # --- updatable-manifold tail ---
+
+    def expand_geodesics(self, a, e, f, *, mode: str = "auto"):
+        from repro.core.update import expand_geodesics
+
+        return expand_geodesics(a, e, f, mode=mode)
+
+    def place_rows(self, x):
+        """Place a (n, D) point set the way this backend serves it."""
+        return jnp.asarray(x)
+
     # --- artifact placement (trivial on one device) ---
 
     def placement_of(self, value):
@@ -217,6 +247,7 @@ class MeshBackend:
         data_axis: str = "data",
         model_axis: str = "model",
         segment: int | None = None,
+        checkpoint_secs: float | None = None,
         checkpoint_cb: Callable | None = None,
     ):
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -225,6 +256,7 @@ class MeshBackend:
         self.data_axis = data_axis
         self.model_axis = model_axis
         self.segment = segment
+        self.checkpoint_secs = checkpoint_secs
         self.checkpoint_cb = checkpoint_cb
         self.tile_spec = NamedSharding(mesh, P(data_axis, model_axis))
 
@@ -322,6 +354,59 @@ class MeshBackend:
             x_new, x_base, geodesics, embedding, self.mesh, k=k,
             data_axis=self.data_axis, model_axis=self.model_axis,
             mean_sq=mean_sq,
+        )
+
+    # --- updatable-manifold tail ---
+
+    @property
+    def absorb_multiple(self) -> int:
+        """Arrival-batch granularity for geodesic absorbs: the grown
+        matrix must keep dividing both mesh axes, so flush groups come in
+        multiples of their lcm."""
+        import math
+
+        return math.lcm(
+            self.mesh.shape[self.data_axis],
+            self.mesh.shape[self.model_axis],
+        )
+
+    def expand_geodesics(self, a, e, f, *, mode: str = "auto"):
+        """Mesh border expansion: the five fused steps run as a
+        shard_map against the tile-sharded base matrix, then the grown
+        (n+m, n+m) matrix is resharded across the mesh (the row/column
+        chunk boundaries all move, so this is a real reshard, done once
+        per flush)."""
+        from repro.core.update import make_expand_sharded
+
+        n, m = a.shape[0], e.shape[0]
+        pd = self.mesh.shape[self.data_axis]
+        pm = self.mesh.shape[self.model_axis]
+        if (n + m) % pd or (n + m) % pm:
+            raise ValueError(
+                f"grown size {n + m} must divide the mesh axes "
+                f"({pd}, {pm}); absorb in multiples of {self.absorb_multiple}"
+            )
+        fn = make_expand_sharded(
+            self.mesh, n, m,
+            data_axis=self.data_axis, model_axis=self.model_axis, mode=mode,
+        )
+        a_int, border, new_block = fn(a, jnp.asarray(e), jnp.asarray(f))
+        top = jnp.concatenate([a_int, border.T], axis=1)
+        bot = jnp.concatenate([border, new_block], axis=1)
+        return jax.device_put(
+            jnp.concatenate([top, bot], axis=0), self.tile_spec
+        )
+
+    def place_rows(self, x):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if x.shape[0] % self.mesh.shape[self.data_axis]:
+            raise ValueError(
+                f"{x.shape[0]} rows must divide the data axis "
+                f"({self.mesh.shape[self.data_axis]})"
+            )
+        return jax.device_put(
+            jnp.asarray(x), NamedSharding(self.mesh, P(self.data_axis))
         )
 
     # --- artifact placement (the elastic-restart hooks) ---
@@ -887,7 +972,18 @@ class ManifoldPipeline:
         seg_state: dict | None, seg_lo: int,
     ) -> Artifacts:
         """Drive a ResumableStage segment by segment, checkpointing the
-        segment state + progress manifest between segments."""
+        segment state + progress manifest between segments.
+
+        Segment sizing: an explicit unit count (stage or backend
+        ``segment``) wins; otherwise, when the backend sets
+        ``checkpoint_secs``, the engine runs the first unit alone,
+        measures it, and sizes every following segment to hit that
+        wall-clock checkpoint cadence (the paper checkpoints its RDD
+        lineage every 10 iterations - a fixed count tuned to its
+        cluster; a seconds target adapts the count to the measured
+        per-unit time of *this* problem and backend).  With neither
+        knob the whole inner loop runs in one shot.
+        """
         ctx = self.ctx
         total = int(stage.num_units(ctx, store))
         if total >= _STEP_STRIDE:
@@ -904,8 +1000,27 @@ class ManifoldPipeline:
         seglen = (
             getattr(stage, "segment", None)
             or getattr(ctx.backend, "segment", None)
-            or total
         )
+        ckpt_secs = getattr(ctx.backend, "checkpoint_secs", None)
+        if seglen is None and ckpt_secs and lo < total:
+            # warm unit: the stage's first run_segment pays the one-time
+            # jit compile, which would inflate the per-unit estimate by
+            # orders of magnitude - run it untimed first
+            state = stage.run_segment(ctx, store, state, lo, lo + 1)
+            jax.block_until_ready(state)
+            lo += 1
+            if lo < total:
+                # calibration unit: the same compiled executable serves
+                # every [lo, hi) (traced bounds), so this times pure work
+                t0 = time.perf_counter()
+                state = stage.run_segment(ctx, store, state, lo, lo + 1)
+                jax.block_until_ready(state)
+                per_unit = max(time.perf_counter() - t0, 1e-9)
+                seglen = max(1, int(round(ckpt_secs / per_unit)))
+                lo += 1
+            if self.checkpoint is not None and lo < total:
+                self._save_partial(i, stage, store, state, lo, total)
+        seglen = seglen or total
         while lo < total:
             hi = min(lo + seglen, total)
             state = stage.run_segment(ctx, store, state, lo, hi)

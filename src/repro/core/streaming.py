@@ -21,10 +21,19 @@ the data axis against the row-sharded geodesics
 masked psum and the ``min(anchor_d + A[idx])`` relaxation is computed on
 each device's column chunk, so per-query work and memory scale 1/p with the
 mesh.
+
+The mapper is no longer read-only: :meth:`StreamingMapper.absorb` folds
+accepted arrivals back into the base geodesics (the updatable-manifold
+engine, :mod:`repro.core.update`), republishing
+``x``/``geodesics``/``embedding`` as an atomic new version
+(:class:`~repro.core.artifacts.VersionedArtifacts`) - readers are
+lock-free and keep serving the version they captured, so queries never
+block on an absorb.
 """
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +41,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core.artifacts import VersionedArtifacts
 from repro.kernels import ops
 
 # Floor for the per-column eigenvalue estimate in the triangulation
@@ -216,6 +226,15 @@ class StreamingMapper:
     pipeline's MeshBackend serves queries with the geodesics row-sharded
     over the mesh (state is ``device_put`` onto the mesh once, at
     construction).
+
+    The serving state lives in a
+    :class:`~repro.core.artifacts.VersionedArtifacts` publication point:
+    :meth:`absorb` folds accepted arrivals into the geodesic system and
+    swaps the serving version atomically (one reference assignment;
+    queries read one snapshot for their whole batch and never take a
+    lock).  ``update`` configures the absorb path
+    (:class:`repro.core.update.UpdateConfig`); the default config is
+    created lazily on first absorb.
     """
 
     def __init__(
@@ -227,6 +246,7 @@ class StreamingMapper:
         k: int = 10,
         batch: int = 256,
         backend=None,
+        update=None,
     ):
         n = x_base.shape[0]
         assert geodesics.shape == (n, n), (geodesics.shape, n)
@@ -241,19 +261,64 @@ class StreamingMapper:
         if getattr(backend, "kind", "local") == "sharded":
             from jax.sharding import NamedSharding
 
-            rows = NamedSharding(backend.mesh, P(backend.data_axis))
             repl = NamedSharding(backend.mesh, P())
-            self.x_base = jax.device_put(jnp.asarray(x_base), rows)
-            self.geodesics = jax.device_put(
+            x_base = backend.place_rows(jnp.asarray(x_base))
+            geodesics = jax.device_put(
                 jnp.asarray(geodesics), backend.tile_spec
             )
-            self.embedding = jax.device_put(jnp.asarray(embedding), repl)
+            embedding = jax.device_put(jnp.asarray(embedding), repl)
         else:
-            self.x_base = jnp.asarray(x_base)
-            self.geodesics = jnp.asarray(geodesics)
-            self.embedding = jnp.asarray(embedding)
-        # the O(n^2) triangulation constant: once per fit, not per batch
-        self.mean_sq = self.backend.row_mean_sq(self.geodesics)
+            x_base = jnp.asarray(x_base)
+            geodesics = jnp.asarray(geodesics)
+            embedding = jnp.asarray(embedding)
+        self._versions = VersionedArtifacts({
+            "x": x_base,
+            "geodesics": geodesics,
+            "embedding": embedding,
+            # the O(n^2) triangulation constant: once per fit, not per batch
+            "mean_sq": self.backend.row_mean_sq(geodesics),
+        })
+        self._update_cfg = update
+        self._updater = None
+        self._absorb_lock = threading.Lock()
+
+    # ------------------------------------------------- versioned state ----
+
+    def snapshot(self):
+        """One immutable serving generation (lock-free read); use the
+        same snapshot for every array a single request touches."""
+        return self._versions.current
+
+    def _publish(self, **artifacts):
+        """Swap in a new serving generation (called by the updater under
+        the absorb lock)."""
+        return self._versions.publish(artifacts)
+
+    @property
+    def version(self) -> int:
+        """Serving version: 0 at fit, +1 per absorbed flush group."""
+        return self._versions.version
+
+    @property
+    def x_base(self):
+        return self._versions.current["x"]
+
+    @property
+    def geodesics(self):
+        return self._versions.current["geodesics"]
+
+    @property
+    def embedding(self):
+        return self._versions.current["embedding"]
+
+    @property
+    def mean_sq(self):
+        return self._versions.current["mean_sq"]
+
+    @property
+    def n_base(self) -> int:
+        """Size of the (possibly grown) base set being served."""
+        return self._versions.current["x"].shape[0]
 
     #: the artifacts this mapper serves from - must be *exported* by the
     #: fitted pipeline (liveness pruning drops everything else)
@@ -261,7 +326,8 @@ class StreamingMapper:
 
     @classmethod
     def from_artifacts(
-        cls, artifacts, *, k: int = 10, batch: int = 256, backend=None
+        cls, artifacts, *, k: int = 10, batch: int = 256, backend=None,
+        update=None,
     ):
         """Build from a ManifoldPipeline.run() result (an ArtifactStore
         Mapping, or any plain dict with the same keys).
@@ -285,15 +351,18 @@ class StreamingMapper:
             )
         return cls(
             artifacts["x"], artifacts["geodesics"], artifacts["embedding"],
-            k=k, batch=batch, backend=backend,
+            k=k, batch=batch, backend=backend, update=update,
         )
 
     @classmethod
     def from_checkpoint(
-        cls, manager, *, k: int = 10, batch: int = 256, backend=None
+        cls, manager, *, k: int = 10, batch: int = 256, backend=None,
+        update=None, replay_updates: bool = True,
     ):
         """Restore the newest pipeline checkpoint holding the needed
-        artifacts (i.e. any stage boundary at or after ``eigen``).
+        artifacts (i.e. any stage boundary at or after ``eigen``), then
+        replay the persisted update log (if any) so absorbed stream
+        arrivals survive the restart instead of being lost.
 
         Tolerant scan (same contract as the pipeline's resume scan): a
         concurrently GC'd or partially written step - manifest unreadable,
@@ -311,32 +380,40 @@ class StreamingMapper:
                     # step GC'd between the manifest read and the array
                     # load, or arrays missing: fall back to an older one
                     continue
-                return cls.from_artifacts(
-                    art, k=k, batch=batch, backend=backend
+                mapper = cls.from_artifacts(
+                    art, k=k, batch=batch, backend=backend, update=update,
                 )
+                if replay_updates:
+                    mapper.replay_update_log(manager.directory)
+                return mapper
         raise FileNotFoundError(
             f"no checkpoint in {manager.directory} holds the "
             "x/geodesics/embedding artifacts (pipeline not run to eigen?)"
         )
 
-    def _map_batch(self, x_new: jax.Array) -> jax.Array:
+    def _map_batch(self, x_new: jax.Array, snap=None) -> jax.Array:
+        snap = snap if snap is not None else self._versions.current
         return self.backend.map_new_points(
-            x_new, self.x_base, self.geodesics, self.embedding,
-            k=self.k, mean_sq=self.mean_sq,
+            x_new, snap["x"], snap["geodesics"], snap["embedding"],
+            k=self.k, mean_sq=snap["mean_sq"],
         )
 
     def __call__(self, x_new: jax.Array) -> jax.Array:
-        """Map (m, D) arrivals -> (m, d) manifold coordinates, batched."""
+        """Map (m, D) arrivals -> (m, d) manifold coordinates, batched.
+
+        The whole call serves from one captured version: an absorb
+        landing mid-call cannot mix generations across chunks."""
+        snap = self._versions.current
         x_new = jnp.asarray(x_new)
         m = x_new.shape[0]
+        d = snap["embedding"].shape[1]
         if m == 0:
-            return jnp.zeros((0, self.embedding.shape[1]),
-                             self.embedding.dtype)
+            return jnp.zeros((0, d), snap["embedding"].dtype)
         if m <= self.batch:
-            return self._map_batch(x_new)
+            return self._map_batch(x_new, snap)
         outs = []
         for lo in range(0, m, self.batch):
-            outs.append(self._map_batch(x_new[lo : lo + self.batch]))
+            outs.append(self._map_batch(x_new[lo : lo + self.batch], snap))
         return jnp.concatenate(outs, axis=0)
 
     def map_stream(self, batches) -> np.ndarray:
@@ -345,3 +422,77 @@ class StreamingMapper:
         if not outs:
             return np.zeros((0, self.embedding.shape[1]))
         return np.concatenate(outs, axis=0)
+
+    # ------------------------------------------------------------ absorb --
+
+    def absorb(self, x_new):
+        """Fold an arrival batch into the base geodesics.
+
+        Arrivals are gated by the Schoeneman-style streaming error
+        metric (accepted: mapped near-isometrically, safe to densify the
+        manifold with; rejected: served but not absorbed), buffered, and
+        - whenever a full flush group is ready - expanded into the
+        geodesic system and republished as a new serving version.
+        Returns an :class:`repro.core.update.AbsorbReport`.
+
+        Single writer: concurrent absorbs serialize on a lock; readers
+        never take it (update-log replay bypasses this entirely via
+        :meth:`replay_update_log`).
+        """
+        from repro.core.update import GeodesicUpdater, UpdateConfig
+
+        with self._absorb_lock:
+            if self._updater is None:
+                self._updater = GeodesicUpdater(
+                    self, self._update_cfg or UpdateConfig()
+                )
+            return self._updater.absorb(x_new)
+
+    def replay_update_log(self, checkpoint_dir: str) -> int:
+        """Replay the update log persisted under `checkpoint_dir` (see
+        :mod:`repro.core.update`): absorbed points are re-expanded with
+        the original flush grouping.  Returns the number of replayed
+        points (0 when there is no log).
+
+        Identity check (same discipline as the pipeline's resume
+        fingerprints): the log records the ``k`` and base-set size it
+        was absorbed against; a mismatching log must not be silently
+        replayed onto a different fit - it raises instead.
+        """
+        import os
+
+        from repro.core.update import (
+            UPDATE_LOG_DIR, GeodesicUpdater, UpdateConfig,
+        )
+
+        found = GeodesicUpdater.find_log(checkpoint_dir)
+        if found is None:
+            return 0
+        x_all, flushes, manifest = found
+        log_k = manifest.get("k")
+        log_n0 = manifest.get("n_base0")
+        if (log_k is not None and log_k != self.k) or (
+            log_n0 is not None and log_n0 != self.n_base
+        ):
+            raise ValueError(
+                f"update log under {checkpoint_dir!r} was absorbed "
+                f"against k={log_k}, n_base={log_n0}; this mapper serves "
+                f"k={self.k}, n_base={self.n_base} - replaying it would "
+                "produce a different manifold.  Restore with matching "
+                "parameters or discard the update log"
+            )
+        with self._absorb_lock:
+            if self._updater is None:
+                import dataclasses
+
+                cfg = self._update_cfg or UpdateConfig()
+                if cfg.log_dir is None:
+                    # keep appending to the same log after the restore
+                    cfg = dataclasses.replace(
+                        cfg,
+                        log_dir=os.path.join(checkpoint_dir, UPDATE_LOG_DIR),
+                    )
+                self._update_cfg = cfg
+                self._updater = GeodesicUpdater(self, cfg)
+            self._updater.replay(x_all, flushes, gen=manifest.get("gen"))
+        return int(x_all.shape[0])

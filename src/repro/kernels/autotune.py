@@ -1,8 +1,9 @@
 """Trace-time tile autotuner for the fused min-plus Pallas kernels.
 
-The three fused kernels (:func:`repro.kernels.ops.minplus_update`,
+The fused kernels (:func:`repro.kernels.ops.minplus_update`,
 :func:`~repro.kernels.ops.minplus_panel_row`,
-:func:`~repro.kernels.ops.minplus_panel_col`) take static tile sizes
+:func:`~repro.kernels.ops.minplus_panel_col`,
+:func:`~repro.kernels.ops.minplus_border`) take static tile sizes
 ``(bm, bn, bk, unroll)``.  The historical defaults (256, 256, 256, 8) are
 a fine center of the space but are not optimal for every problem shape:
 small panels leave the grid degenerate, skinny contractions want a larger
@@ -65,7 +66,10 @@ ENV_TILES = "REPRO_MINPLUS_TILES"
 ENV_AUTOTUNE = "REPRO_MINPLUS_AUTOTUNE"
 
 #: ops that seed the accumulator from an (m, n) input (one extra HBM read)
-FUSED_OPS = ("minplus_update", "minplus_panel_row", "minplus_panel_col")
+FUSED_OPS = (
+    "minplus_update", "minplus_panel_row", "minplus_panel_col",
+    "minplus_border",
+)
 _UNSEEDED = ("minplus",)
 
 

@@ -14,18 +14,26 @@ execute in interpret mode or fall back to the references, selectable via
   - "ref":      force the jnp oracle
 
 Tile resolution for the tiled kernels (``minplus``, ``minplus_update``,
-and the Phase-2 panel kernels):
+the Phase-2 panel kernels, and the border-expansion kernel):
 
   1. Explicit ``bm``/``bn``/``bk``/``unroll`` kwargs win and are
      validated *up front* - a non-divisible tile raises a ``ValueError``
      naming the offending dimension instead of surfacing as a raw
      assertion from inside the Pallas trace.
-  2. Otherwise the three fused kernels consult the trace-time roofline
+  2. Otherwise the fused kernels consult the trace-time roofline
      autotuner (:mod:`repro.kernels.autotune`: in-process cache, env
      overrides ``REPRO_MINPLUS_TILES`` / ``REPRO_MINPLUS_AUTOTUNE=0``).
   3. Plain ``minplus`` falls back to the kernels' static defaults.
+
+This module also hosts the roofline decision for the APSP Phase-2
+``split_panels`` variant (:func:`auto_split_panels`): whether each mesh
+rank should compute a 1/p slice of the panel product and all-gather the
+result, trading redundant panel FLOPs for one extra ICI gather per
+iteration.  ``REPRO_SPLIT_PANELS=0/1`` pins it.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -33,12 +41,15 @@ from repro.kernels import autotune
 from repro.kernels import ref as _ref
 from repro.kernels.floyd_warshall import floyd_warshall as _fw_pallas
 from repro.kernels.minplus import minplus as _mp_pallas
+from repro.kernels.minplus_border import minplus_border as _mb_pallas
 from repro.kernels.minplus_panel import (
     minplus_panel_col as _mpc_pallas,
     minplus_panel_row as _mpr_pallas,
 )
 from repro.kernels.minplus_update import minplus_update as _mpu_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
+
+ENV_SPLIT_PANELS = "REPRO_SPLIT_PANELS"
 
 
 def _on_tpu() -> bool:
@@ -180,6 +191,26 @@ def minplus_panel_col(c, d, *, mode: str = "auto", **tile_kw):
     return _ref.minplus_panel_col_ref(c, d)
 
 
+def minplus_border(e, a, *, mode: str = "auto", **tile_kw):
+    """Fused border relaxation B = min(E, E (x) A) without the (m, n)
+    min-plus intermediate.
+
+    e (m, n) border edge rows, a (n, n) closed base system -> (m, n).
+    The first step of incremental geodesic expansion
+    (:mod:`repro.core.update`): the new points' edge rows are relaxed
+    through the base matrix with the accumulator seeded from E.
+    Bit-identical to :func:`repro.kernels.ref.minplus_border_ref` on
+    every backend.  Tiles: explicit kwargs win (validated up front),
+    else autotuned.
+    """
+    m, n = e.shape
+    tile_kw = _tiles("minplus_border", m, n, n, tile_kw)
+    use_pallas, interpret = _resolve(mode)
+    if use_pallas:
+        return _mb_pallas(e, a, interpret=interpret, **tile_kw)
+    return _ref.minplus_border_ref(e, a)
+
+
 def floyd_warshall(d, *, mode: str = "auto"):
     """In-VMEM Floyd-Warshall closure of a dense (b, b) block (Phase 1)."""
     use_pallas, interpret = _resolve(mode)
@@ -194,3 +225,51 @@ def pairwise_sq_dists(x, y, *, mode: str = "auto", **tile_kw):
     if use_pallas:
         return _pd_pallas(x, y, interpret=interpret, **tile_kw)
     return _ref.pairwise_sq_dists_ref(x, y)
+
+
+# ---------------------------------------------- Phase-2 panel splitting ----
+
+
+def auto_split_panels(
+    n: int, b: int, pd: int, pm: int, *, itemsize: int = 4
+) -> bool:
+    """Roofline decision for the APSP Phase-2 split-panel variant.
+
+    In the baseline schedule every rank of a row/column group redundantly
+    computes the full panel product (the paper's one-block-one-task
+    mapping); with ``split_panels`` each rank computes a 1/p slice in
+    place and the group all-gathers the result.  Worth it exactly when
+    the redundant-FLOP saving outruns the extra gather:
+
+      saved  = 2 b^2 (n/pm) (1 - 1/pd) / VPU  +  2 b^2 (n/pd) (1 - 1/pm) / VPU
+      gather = itemsize * (b (n/pm) (pd-1)/pd + (n/pd) b (pm-1)/pm) / ICI
+
+    using the shared machine constants from :mod:`repro.kernels.autotune`
+    (single source with the stage-level rooflines).  The split is only
+    legal when the per-rank slice stays tile-aligned: ``b`` divisible by
+    both mesh axes with the slice at least one (8,)-sublane register row.
+
+    ``REPRO_SPLIT_PANELS=1`` / ``0`` pins the decision (an illegal forced
+    split is still refused).  Consulted by
+    :func:`repro.core.apsp.make_apsp_segment` when ``split_panels`` is
+    left unset.
+    """
+    aligned = (
+        pd > 1 or pm > 1
+    ) and b % pd == 0 and b % pm == 0 and (b // pd) % 8 == 0 \
+        and (b // pm) % 8 == 0
+    raw = os.environ.get(ENV_SPLIT_PANELS)
+    if raw is not None:
+        want = raw.strip().lower() not in ("0", "false", "off", "")
+        return want and aligned
+    if not aligned:
+        return False
+    nr, nc = n // pd, n // pm
+    saved = (
+        2.0 * b * b * nc * (1.0 - 1.0 / pd)
+        + 2.0 * b * b * nr * (1.0 - 1.0 / pm)
+    ) / autotune.VPU_OPS
+    gather = itemsize * (
+        b * nc * (pd - 1) / pd + nr * b * (pm - 1) / pm
+    ) / autotune.ICI_BW
+    return saved > gather

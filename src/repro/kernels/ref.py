@@ -100,6 +100,22 @@ def minplus_panel_col_ref(
     return minplus_update_ref(c, c, d, chunk=chunk)
 
 
+def minplus_border_ref(
+    e: jax.Array, a: jax.Array, *, chunk: int = 256
+) -> jax.Array:
+    """Fused border-relaxation oracle: B = min(E, E (x) A).
+
+    e (m, n), a (n, n) -> (m, n).  Delegates to
+    :func:`minplus_update_ref` with E as both seed and first contraction
+    operand - the accumulation is seeded from E, so no (m, n) product
+    intermediate exists, and because min is exact the result is
+    bit-identical to the Pallas border kernel for any tiling.
+    """
+    m, n = e.shape
+    assert a.shape == (n, n), (e.shape, a.shape)
+    return minplus_update_ref(e, e, a, chunk=chunk)
+
+
 def floyd_warshall_ref(d: jax.Array) -> jax.Array:
     """In-block Floyd-Warshall: all-pairs shortest paths on a dense block.
 

@@ -113,6 +113,8 @@ def serve_manifold(
     arrival: int = 1,
     checkpoint_dir: str | None = None,
     resume: bool = False,
+    checkpoint_secs: float | None = None,
+    absorb: int = 0,
     mesh_shape: tuple[int, int] | None = None,
     seed: int = 0,
 ):
@@ -127,7 +129,16 @@ def serve_manifold(
     the restore path is placement-aware, the restart may land on a
     *different* mesh shape (features are padded to a fixed mesh-independent
     width so the checkpointed input matches): artifacts are ``device_put``
-    straight onto the current mesh's tile sharding.
+    straight onto the current mesh's tile sharding.  A restore also
+    replays the persisted update log, so absorbed arrivals survive the
+    restart.
+    checkpoint_secs: size the mid-stage (APSP panel) checkpoint segments
+    to this wall-clock cadence from the measured per-panel time, instead
+    of a fixed unit count (the paper's every-10-iterations rule, in
+    seconds).
+    absorb: fold the first `absorb` streamed arrivals back into the base
+    geodesics through the service's write path (admission-controlled,
+    runs between read flushes) before serving the rest.
     mesh_shape: (data, model) device grid; None serves single-device.
     Returns timing + per-request latency percentiles + quality."""
     from repro.core import metrics
@@ -163,7 +174,7 @@ def serve_manifold(
             x_base = jnp.pad(x_base, ((0, 0), (0, pad)))
             x_stream = np.pad(x_stream, ((0, 0), (0, pad)))
         mesh = mesh_lib.make_mesh(mesh_shape, ("data", "model"))
-        backend = MeshBackend(mesh)
+        backend = MeshBackend(mesh, checkpoint_secs=checkpoint_secs)
         x_base = jax.device_put(
             x_base, NamedSharding(mesh, P("data", "model"))
         )
@@ -176,7 +187,7 @@ def serve_manifold(
 
     pipe = ManifoldPipeline(
         cfg=PipelineConfig(k=k, d=d, block=block),
-        backend=backend or LocalBackend(),
+        backend=backend or LocalBackend(checkpoint_secs=checkpoint_secs),
         checkpoint=checkpoint,
     )
     t0 = time.time()
@@ -184,15 +195,34 @@ def serve_manifold(
     jax.block_until_ready(art["embedding"])
     t_fit = time.time() - t0
 
+    update_cfg = None
+    if checkpoint_dir:
+        import os
+
+        from repro.core.update import UPDATE_LOG_DIR, UpdateConfig
+
+        update_cfg = UpdateConfig(
+            log_dir=os.path.join(checkpoint_dir, UPDATE_LOG_DIR)
+        )
     mapper = StreamingMapper.from_artifacts(
-        art, k=k, batch=stream_batch, backend=backend
+        art, k=k, batch=stream_batch, backend=backend, update=update_cfg
     )
+    if resume and checkpoint_dir:
+        # a restarted server replays absorbed arrivals, not just the fit
+        mapper.replay_update_log(checkpoint_dir)
     service = BatchedMapperService(
         mapper, max_batch=stream_batch, max_latency_ms=max_latency_ms
     )
+    n_absorbed = 0
     with service:
         service.warmup(x_stream.shape[1])
         t0 = time.time()
+        if absorb:
+            # write path: fold early arrivals into the base geodesics;
+            # every arrival is still queried below (absorbed points are
+            # then answered from the grown base they are part of)
+            report = service.absorb(x_stream[:absorb])
+            n_absorbed = report.absorbed
         futures = [
             service.submit(x_stream[lo : lo + arrival])
             for lo in range(0, n_stream, arrival)
@@ -201,7 +231,13 @@ def serve_manifold(
         t_serve = time.time() - t0
     stats = service.stats()
 
-    full = np.concatenate([np.asarray(art["embedding"]), y_stream])
+    # quality in the *served* frame: the absorb republished the base
+    # embedding (possibly with flipped eigenvector signs), and every
+    # query above was answered from that version - so the base rows must
+    # come from the current serving snapshot, not the version-0 artifacts
+    full = np.concatenate(
+        [np.asarray(mapper.embedding)[:n_base], y_stream]
+    )
     err = float(
         metrics.procrustes_error(jnp.asarray(full), jnp.asarray(latent))
     )
@@ -216,6 +252,8 @@ def serve_manifold(
         "procrustes_error": err,
         "n_base": n_base,
         "n_stream": n_stream,
+        "absorbed": n_absorbed,
+        "serving_version": mapper.version,
     }
 
 
@@ -260,7 +298,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument(
         "--resume", action="store_true",
         help="restore the fitted pipeline from --checkpoint-dir instead "
-        "of refitting (placement-aware: works across mesh shapes)",
+        "of refitting (placement-aware: works across mesh shapes); also "
+        "replays the persisted update log of absorbed arrivals",
+    )
+    ap.add_argument(
+        "--checkpoint-secs", type=float, default=None,
+        help="target wall-clock interval between mid-stage checkpoints; "
+        "segment sizes are derived from the measured per-unit time "
+        "(default: one segment per stage)",
+    )
+    ap.add_argument(
+        "--absorb", type=int, default=0,
+        help="fold this many early arrivals back into the base geodesics "
+        "through the service write path before serving the rest",
     )
     ap.add_argument(
         "--mesh", default=None, metavar="DxM",
@@ -292,6 +342,8 @@ def main():
             seed=args.seed,
             checkpoint_dir=args.checkpoint_dir,
             resume=args.resume,
+            checkpoint_secs=args.checkpoint_secs,
+            absorb=args.absorb,
             mesh_shape=mesh_shape,
         )
         print(
@@ -301,6 +353,7 @@ def main():
             f"p50={out['latency_p50_ms']:.1f}ms "
             f"p99={out['latency_p99_ms']:.1f}ms "
             f"mean_batch={out['mean_batch']:.1f} "
+            f"absorbed={out['absorbed']} v{out['serving_version']} "
             f"err={out['procrustes_error']:.2e}"
         )
         return

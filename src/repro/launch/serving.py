@@ -15,11 +15,22 @@ too):
   rows by default so the device executable is compiled exactly once, not
   once per coalesced size - p99 latency is jitter, not recompilation.
 * :meth:`BatchedMapperService.stats` - per-request latency percentiles
-  (p50/p99), batch-occupancy, and sustained points/s, the numbers the
-  serving benchmark (``benchmarks/bench_serving.py``) reports.
+  (p50/p99) and batch occupancy over a bounded rolling window (memory
+  stays flat under sustained traffic), plus lifetime request/point
+  counters and sustained points/s - the numbers the serving benchmark
+  (``benchmarks/bench_serving.py``) reports.
+* Write path: :meth:`BatchedMapperService.submit_absorb` coordinates
+  geodesic absorbs (:meth:`StreamingMapper.absorb`) with the read path -
+  updates run on the scheduler thread *between* flushes (never
+  concurrently with a mapped batch), and admission control rejects
+  absorption outright while the read queue is hot, so a slow O(n^2)
+  expansion can never head-of-line block interactive traffic that is
+  already backed up.  Reads themselves never block on a write: the
+  mapper serves from an atomically-versioned snapshot.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -27,6 +38,10 @@ import time
 from concurrent.futures import Future
 
 import numpy as np
+
+
+class AbsorbRejected(RuntimeError):
+    """Absorption was refused by admission control (read queue hot)."""
 
 
 @dataclasses.dataclass
@@ -51,6 +66,13 @@ class BatchedMapperService:
     ``max_batch`` - an overflowing request opens the next batch instead -
     so only a single request larger than ``max_batch`` ever produces an
     off-shape (unpadded) flush.
+    stats_window: how many recent requests/batches the latency and
+    occupancy statistics cover.  Bounded deques, not unbounded lists:
+    a long-lived server's stats memory stays flat no matter how much
+    traffic it has served (lifetime counters are plain ints).
+    absorb_admission: reject ``submit_absorb`` while more than this many
+    *requests* are waiting in the read queue (None: ``max_batch``,
+    i.e. roughly one flush worth of backlog).
     """
 
     def __init__(
@@ -60,22 +82,41 @@ class BatchedMapperService:
         max_batch: int = 64,
         max_latency_ms: float = 10.0,
         pad_batches: bool = True,
+        stats_window: int = 4096,
+        absorb_admission: int | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if stats_window < 1:
+            raise ValueError(
+                f"stats_window must be >= 1, got {stats_window}"
+            )
         self.mapper = mapper
         self.max_batch = max_batch
         self.max_latency_s = max_latency_ms / 1e3
         self.pad_batches = pad_batches
+        self.absorb_admission = (
+            absorb_admission if absorb_admission is not None else max_batch
+        )
         self._queue: queue.Queue[_Request] = queue.Queue()
+        self._absorbs: collections.deque = collections.deque()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
-        self._latencies: list[float] = []
-        self._batch_sizes: list[int] = []
+        # rolling stats windows (bounded) + lifetime counters
+        self._latencies: collections.deque[float] = collections.deque(
+            maxlen=stats_window
+        )
+        self._batch_sizes: collections.deque[int] = collections.deque(
+            maxlen=stats_window
+        )
         self._t_first: float | None = None
         self._t_last: float | None = None
         self._n_points = 0
+        self._n_requests = 0
+        self._n_batches = 0
+        self._n_absorbed = 0
+        self._n_absorb_calls = 0
 
     # --------------------------------------------------------- lifecycle --
 
@@ -87,7 +128,8 @@ class BatchedMapperService:
         return self
 
     def stop(self):
-        """Stop the scheduler; pending requests are drained first."""
+        """Stop the scheduler; pending requests (and admitted absorbs)
+        are drained first."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join()
@@ -122,6 +164,36 @@ class BatchedMapperService:
         """Blocking convenience wrapper around :meth:`submit`."""
         return self.submit(x).result()
 
+    def submit_absorb(self, x) -> Future:
+        """Request that an arrival batch be folded into the base
+        geodesics (``mapper.absorb``).  Returns a Future resolving to
+        the :class:`repro.core.update.AbsorbReport`.
+
+        Admission control: if the read queue currently holds more than
+        ``absorb_admission`` waiting requests, the Future fails
+        immediately with :class:`AbsorbRejected` - under pressure the
+        service sheds the (deferrable) write work, never the reads.
+        Admitted absorbs execute on the scheduler thread between
+        flushes.
+        """
+        if self._thread is None:
+            raise RuntimeError("service not started (use `with service:`)")
+        fut: Future = Future()
+        if self._queue.qsize() > self.absorb_admission:
+            fut.set_exception(AbsorbRejected(
+                f"read queue hot ({self._queue.qsize()} requests waiting "
+                f"> admission limit {self.absorb_admission}); retry later"
+            ))
+            return fut
+        self._absorbs.append(
+            (np.atleast_2d(np.asarray(x)), fut, time.monotonic())
+        )
+        return fut
+
+    def absorb(self, x):
+        """Blocking convenience wrapper around :meth:`submit_absorb`."""
+        return self.submit_absorb(x).result()
+
     # --------------------------------------------------------- scheduler --
 
     def _loop(self):
@@ -133,7 +205,13 @@ class BatchedMapperService:
                 try:
                     first = self._queue.get(timeout=0.01)
                 except queue.Empty:
-                    if self._stop.is_set() and self._queue.empty():
+                    # idle gap: run deferred write work between flushes
+                    self._run_absorbs()
+                    if (
+                        self._stop.is_set()
+                        and self._queue.empty()
+                        and not self._absorbs
+                    ):
                         return
                     continue
             batch = [first]
@@ -160,6 +238,38 @@ class BatchedMapperService:
                 batch.append(req)
                 count += req.x.shape[0]
             self._flush(batch)
+            if pending is None and self._queue.empty():
+                # between flushes with no backlog: absorb window
+                self._run_absorbs()
+            elif self._absorb_overdue():
+                # sustained read traffic must not starve an *admitted*
+                # absorb forever: once the oldest has aged well past the
+                # batching deadline, run exactly one between flushes
+                # (bounding the per-flush read-latency impact)
+                self._run_absorbs(limit=1)
+
+    def _absorb_overdue(self) -> bool:
+        if not self._absorbs:
+            return False
+        waited = time.monotonic() - self._absorbs[0][2]
+        return waited > max(10.0 * self.max_latency_s, 0.25)
+
+    def _run_absorbs(self, limit: int | None = None):
+        """Execute admitted absorbs (scheduler thread only, so updates
+        are strictly serialized with read flushes)."""
+        while self._absorbs and (limit is None or limit > 0):
+            x, fut, _ = self._absorbs.popleft()
+            if limit is not None:
+                limit -= 1
+            try:
+                report = self.mapper.absorb(x)
+            except Exception as e:
+                fut.set_exception(e)
+                continue
+            with self._lock:
+                self._n_absorb_calls += 1
+                self._n_absorbed += getattr(report, "absorbed", 0)
+            fut.set_result(report)
 
     def _flush(self, reqs: list[_Request]):
         xs = np.concatenate([r.x for r in reqs], axis=0)
@@ -183,18 +293,24 @@ class BatchedMapperService:
         with self._lock:
             self._latencies.extend(t_done - r.t_submit for r in reqs)
             self._batch_sizes.append(n)
+            self._n_requests += len(reqs)
             self._n_points += n
+            self._n_batches += 1
             self._t_last = t_done
 
     # ------------------------------------------------------------- stats --
 
     def stats(self) -> dict:
-        """Latency percentiles + sustained throughput over the service's
-        lifetime so far."""
+        """Latency/occupancy percentiles over the rolling window, plus
+        lifetime counters and sustained throughput."""
         with self._lock:
             lat = np.asarray(self._latencies)
             sizes = np.asarray(self._batch_sizes)
+            n_requests = self._n_requests
             n_points = self._n_points
+            n_batches = self._n_batches
+            absorbed = self._n_absorbed
+            absorb_calls = self._n_absorb_calls
             wall = (
                 (self._t_last - self._t_first)
                 if self._t_first is not None and self._t_last is not None
@@ -202,17 +318,22 @@ class BatchedMapperService:
             )
         if lat.size == 0:
             return {
-                "requests": 0, "points": 0, "batches": 0,
+                "requests": n_requests, "points": n_points, "batches": 0,
                 "latency_p50_ms": float("nan"),
                 "latency_p99_ms": float("nan"),
                 "mean_batch": float("nan"), "points_per_s": 0.0,
+                "window": 0, "absorbed": absorbed,
+                "absorb_calls": absorb_calls,
             }
         return {
-            "requests": int(lat.size),
-            "points": int(n_points),
-            "batches": int(sizes.size),
+            "requests": n_requests,
+            "points": n_points,
+            "batches": n_batches,
             "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
             "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
             "mean_batch": float(sizes.mean()),
             "points_per_s": n_points / max(wall, 1e-9),
+            "window": int(lat.size),
+            "absorbed": absorbed,
+            "absorb_calls": absorb_calls,
         }

@@ -113,3 +113,45 @@ def test_constants_are_shared_with_launch_rooflines():
     assert analytics.VPU_OPS is autotune.VPU_OPS
     assert analytics.HBM_BW is autotune.HBM_BW
     assert analytics.PEAK_FLOPS is autotune.PEAK_FLOPS
+
+
+# --------------------------------------------- Phase-2 split-panel auto ----
+
+
+def test_auto_split_panels_pinned_decisions():
+    """The roofline decision on known shapes: big panels over a wide mesh
+    split (redundant-FLOP saving dominates), small panels don't (the
+    gather costs more than the saved compute)."""
+    # n=4096, b=512 over a 4x2 mesh: saving ~2.8e-4 s vs gather ~8.4e-5 s
+    assert ops.auto_split_panels(4096, 512, 4, 2) is True
+    # n=256, b=64 over the same mesh: saving ~2e-7 s vs gather ~6.6e-7 s
+    assert ops.auto_split_panels(256, 64, 4, 2) is False
+    # single-device mesh: nothing to split
+    assert ops.auto_split_panels(4096, 512, 1, 1) is False
+
+
+def test_auto_split_panels_requires_tile_alignment():
+    """b must divide both mesh axes with >= one (8,)-sublane row per
+    slice, or the split is refused regardless of the model."""
+    assert ops.auto_split_panels(4096, 500, 4, 2) is False   # 500 % 8
+    assert ops.auto_split_panels(4096, 24, 4, 2) is False    # 24/4 = 6 < 8
+    assert ops.auto_split_panels(4096, 512, 3, 2) is False   # 512 % 3
+
+
+def test_auto_split_panels_env_override(monkeypatch):
+    monkeypatch.setenv(ops.ENV_SPLIT_PANELS, "1")
+    assert ops.auto_split_panels(256, 64, 4, 2) is True      # forced on
+    # ... but an unaligned forced split is still refused
+    assert ops.auto_split_panels(4096, 500, 4, 2) is False
+    monkeypatch.setenv(ops.ENV_SPLIT_PANELS, "0")
+    assert ops.auto_split_panels(4096, 512, 4, 2) is False   # forced off
+
+
+def test_minplus_border_is_a_seeded_op():
+    """The border kernel shares the fused-op cost model (seed read in the
+    HBM term) and resolves valid tiles for its (m, n, n) shapes."""
+    assert "minplus_border" in autotune.FUSED_OPS
+    cfg, cost = autotune.best_config("minplus_border", 16, 512, 512)
+    assert autotune.divides(cfg, 16, 512, 512)
+    plain = autotune.modeled_cost("minplus", 16, 512, 512, cfg)
+    assert cost.hbm_bytes > plain.hbm_bytes

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.minplus import minplus as mp_pallas
+from repro.kernels.minplus_border import minplus_border as mb_pallas
 from repro.kernels.minplus_panel import (
     minplus_panel_col as mpc_pallas,
     minplus_panel_row as mpr_pallas,
@@ -99,6 +100,42 @@ def test_minplus_panel_with_inf(rng):
     want = np.minimum(r, np.min(d[:, :, None] + r[None, :, :], axis=1))
     got = mpr_pallas(d, r, bm=32, bn=32, bk=32, unroll=4, interpret=True)
     np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "m,n,bm,bn,bk,unroll",
+    [
+        (8, 32, 8, 32, 32, 4),
+        (16, 128, 8, 64, 32, 8),
+        (64, 64, 64, 64, 64, 16),
+        (8, 8, 8, 8, 8, 1),
+    ],
+)
+def test_minplus_border_matches_ref(m, n, bm, bn, bk, unroll, rng):
+    """Border relaxation B = min(E, E (x) A): Pallas vs oracle, with inf
+    (sparse edge rows) in the mix - the shape the absorb path runs."""
+    a = _closed_diag_block(rng, n)
+    e = rng.uniform(0, 30, (m, n)).astype(np.float32)
+    e[e > 10.0] = np.inf
+    want = np.minimum(e, np.min(e[:, :, None] + a[None, :, :], axis=1))
+    got = mb_pallas(e, a, bm=bm, bn=bn, bk=bk, unroll=unroll,
+                    interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(ref.minplus_border_ref(e, a)))
+
+
+def test_minplus_border_equals_materializing_composition(rng):
+    """Fused border == min(E, minplus(E, A)) bit for bit through the ops
+    dispatch on every mode that executes here."""
+    a = _closed_diag_block(rng, 64)
+    e = rng.uniform(0, 30, (16, 64)).astype(np.float32)
+    for mode in ("auto", "ref", "pallas"):
+        got = ops.minplus_border(e, a, mode=mode)
+        assert np.array_equal(
+            np.asarray(got),
+            np.asarray(jnp.minimum(e, ops.minplus(e, a, mode=mode))),
+        )
 
 
 def test_panel_equals_materializing_composition(rng):

@@ -76,6 +76,29 @@ y_o = np.asarray(streaming.map_new_points(
     xs, xb, res_d.geodesics, res_d.embedding, k=10))
 np.testing.assert_allclose(y_d, y_o, rtol=1e-5, atol=1e-5)
 print("OK mesh-e2e-serving")
+
+# absorb on mesh vs local: same arrivals folded into the same base fit
+# must grow the same geodesic system within 1e-5 (the augmented-graph
+# edges are built on the gathered base, so the structure is identical;
+# only min-plus schedules differ).  The mesh flush multiple is
+# lcm(4, 2) = 4; 16 arrivals flush completely on both backends.
+mapper_loc = streaming.StreamingMapper(
+    xb, res.geodesics, res.embedding, k=10, batch=32)
+mapper_mesh = streaming.StreamingMapper(
+    xb, res.geodesics, res.embedding, k=10, batch=32, backend=backend)
+assert mapper_mesh.backend.absorb_multiple == 4
+rep_l = mapper_loc.absorb(np.asarray(xs[:16]))
+rep_m = mapper_mesh.absorb(np.asarray(xs[:16]))
+assert rep_l.absorbed == rep_m.absorbed == 16, (rep_l, rep_m)
+assert mapper_mesh.version == 1 and mapper_mesh.n_base == n + 16
+np.testing.assert_allclose(
+    np.asarray(mapper_mesh.geodesics), np.asarray(mapper_loc.geodesics),
+    rtol=1e-5, atol=1e-5)
+y_l2 = np.asarray(mapper_loc(xs[16:]))
+y_m2 = np.asarray(mapper_mesh(xs[16:]))
+sign = np.sign(np.sum(y_l2 * y_m2, axis=0))  # eigen sign is arbitrary
+np.testing.assert_allclose(y_m2 * sign, y_l2, rtol=1e-4, atol=1e-4)
+print("OK mesh-absorb")
 print("ALL-MESH-SERVING-OK")
 """
 

@@ -318,3 +318,109 @@ def test_serve_manifold_reports_queue_stats(tmp_path):
     assert np.isfinite(out["latency_p50_ms"])
     assert out["latency_p99_ms"] >= out["latency_p50_ms"]
     assert out["points_per_s"] > 0
+
+
+# ------------------------------------------------ rolling stats window ----
+
+
+def test_stats_memory_stays_flat_over_sustained_traffic():
+    """10k requests must not grow the latency/occupancy buffers past the
+    rolling window (they used to be unbounded lists), while the lifetime
+    counters keep the true totals."""
+    window = 128
+    with BatchedMapperService(
+        lambda x: np.zeros((x.shape[0], 2), np.float32),
+        max_batch=8, max_latency_ms=0.1, stats_window=window,
+    ) as s:
+        futures = [s.submit(np.zeros(3, np.float32)) for _ in range(10_000)]
+        for f in futures:
+            f.result(timeout=60)
+    assert len(s._latencies) <= window
+    assert len(s._batch_sizes) <= window
+    stats = s.stats()
+    assert stats["requests"] == 10_000           # lifetime, not windowed
+    assert stats["points"] == 10_000
+    assert stats["window"] <= window
+    assert stats["latency_p99_ms"] >= stats["latency_p50_ms"] > 0
+
+
+def test_stats_window_validation():
+    with pytest.raises(ValueError, match="stats_window"):
+        BatchedMapperService(lambda x: x, stats_window=0)
+
+
+# ------------------------------------------------- absorb coordination ----
+
+
+class _AbsorbableMapper:
+    """Callable mapper with a recorded absorb() - tracks interleaving."""
+
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, x):
+        self.calls.append(("map", x.shape[0]))
+        return np.zeros((x.shape[0], 2), np.float32)
+
+    def absorb(self, x):
+        self.calls.append(("absorb", x.shape[0]))
+        import types
+
+        return types.SimpleNamespace(absorbed=x.shape[0])
+
+
+def test_absorb_runs_between_flushes():
+    """An admitted absorb executes on the scheduler thread, serialized
+    with read flushes, and resolves its future with the report."""
+    mapper = _AbsorbableMapper()
+    with BatchedMapperService(
+        mapper, max_batch=4, max_latency_ms=2.0
+    ) as s:
+        r1 = s.submit(np.zeros((2, 3), np.float32))
+        fut = s.submit_absorb(np.zeros((6, 3), np.float32))
+        r2 = s.submit(np.zeros((2, 3), np.float32))
+        assert fut.result(timeout=30).absorbed == 6
+        r1.result(timeout=30), r2.result(timeout=30)
+    kinds = [k for k, _ in mapper.calls]
+    assert "absorb" in kinds
+    assert s.stats()["absorbed"] == 6
+    assert s.stats()["absorb_calls"] == 1
+
+
+def test_absorb_rejected_when_queue_hot():
+    """Admission control: with more requests waiting than the admission
+    limit, submit_absorb fails fast instead of head-of-line blocking."""
+    import threading
+
+    from repro.launch.serving import AbsorbRejected
+
+    gate = threading.Event()
+
+    def slow_mapper(x):
+        gate.wait(30)
+        return np.zeros((x.shape[0], 2), np.float32)
+
+    slow_mapper.absorb = lambda x: None
+    s = BatchedMapperService(
+        slow_mapper, max_batch=1, max_latency_ms=1.0, absorb_admission=2
+    )
+    with s:
+        futures = [s.submit(np.zeros(3, np.float32)) for _ in range(8)]
+        # the scheduler is stuck in the first flush; > 2 requests queued
+        fut = s.submit_absorb(np.zeros((4, 3), np.float32))
+        with pytest.raises(AbsorbRejected, match="read queue hot"):
+            fut.result(timeout=5)
+        gate.set()
+        for f in futures:
+            f.result(timeout=30)
+
+
+def test_absorb_errors_surface_via_future():
+    def mapper(x):
+        return np.zeros((x.shape[0], 2), np.float32)
+
+    # a mapper without absorb(): the future carries the AttributeError
+    with BatchedMapperService(mapper, max_batch=4) as s:
+        fut = s.submit_absorb(np.zeros((2, 3), np.float32))
+        with pytest.raises(AttributeError):
+            fut.result(timeout=30)
