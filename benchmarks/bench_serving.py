@@ -23,6 +23,15 @@ that reads complete while the absorb is in flight without serializing
 behind it, that post-absorb queries are answered from the grown base,
 and that the grown geodesics match refitting exact Isomap on base ∪
 accepted (same neighbourhood structure) within 1e-5.
+
+``--regime sparse`` drives the sparse scale regime instead: the fit is
+pinned under a REPRO_DENSE_BYTES budget the dense chain cannot hold at
+this n (asserted - the dense pipeline must refuse), serving and absorb
+run through the (m, n) landmark panel (LandmarkStreamingMapper), and
+the absorb path is asserted free of (n, n)-shaped jaxpr variables.
+
+Every run merges its rows into the day's ``BENCH_<date>.json`` at the
+repo root (shared with benchmarks/run.py; CI uploads it).
 """
 from __future__ import annotations
 
@@ -54,6 +63,12 @@ def build_parser() -> argparse.ArgumentParser:
                     default=False,
                     help="run the streaming-absorb smoke "
                          "(serve -> absorb -> serve) instead of the sweep")
+    ap.add_argument("--regime", choices=("dense", "sparse"),
+                    default="dense",
+                    help="dense: exact (n, n) chain (the default, what "
+                    "the oracle assertions compare against); sparse: "
+                    "landmark-panel chain under a dense-refusing "
+                    "REPRO_DENSE_BYTES budget")
     return ap
 
 
@@ -94,15 +109,20 @@ def _fit(args):
         backend = LocalBackend()
         block = min(args.block, n_base)
 
+    cfg = PipelineConfig(
+        k=args.k, d=2, block=block,
+        regime=getattr(args, "regime", "dense"),
+    )
+    from repro.core.pipeline import stages_for
+
     pipe = ManifoldPipeline(
-        backend=backend,
-        cfg=PipelineConfig(k=args.k, d=2, block=block),
+        stages_for(cfg, n_base), backend=backend, cfg=cfg,
     )
     t0 = time.perf_counter()
     art = pipe.run(x_base)
     fit_s = time.perf_counter() - t0
-    print(f"# fit backend={args.backend} n_base={n_base} "
-          f"fit_s={fit_s:.2f}", file=sys.stderr)
+    print(f"# fit backend={args.backend} regime={cfg.regime} "
+          f"n_base={n_base} fit_s={fit_s:.2f}", file=sys.stderr)
     return x_base, x_stream, backend, art, n_base, n_stream
 
 
@@ -259,11 +279,132 @@ def run_absorb_smoke(args) -> dict:
     }
     print("backend,absorbed,version,reads_during_absorb_s,p50_ms,p99_ms")
     print(",".join(str(row[c]) for c in row))
+    from run import write_bench_json
+
+    write_bench_json([
+        {"name": f"serving_dense_absorb_{args.backend}", **row}
+    ])
+    return row
+
+
+def run_absorb_smoke_sparse(args) -> dict:
+    """Sparse-regime fit -> serve -> absorb smoke (--regime sparse --absorb).
+
+    Asserted, not just reported:
+
+    * the run is pinned under a ``REPRO_DENSE_BYTES`` budget the dense
+      chain cannot hold at this n, and the dense pipeline actually
+      *refuses* (DenseBudgetError) - so everything below genuinely ran
+      without the (n, n) base;
+    * serve -> absorb -> serve works end to end through the service:
+      absorbed > 0, version bump, base and panel columns grown;
+    * the absorb expansion (:func:`repro.core.update.expand_panel`)
+      carries ZERO (n, n)-shaped jaxpr variables, before or after the
+      growth - the sparse write path never densifies either.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sparse as sparse_mod, update as update_mod
+    from repro.core.pipeline import (
+        LocalBackend, ManifoldPipeline, PipelineConfig,
+    )
+    from repro.core.streaming import LandmarkStreamingMapper
+    from repro.launch.serving import BatchedMapperService
+    from run import _shaped_vars, write_bench_json
+
+    # pin a budget the dense chain cannot hold at this n (CI sets its
+    # own; a local run self-pins so the refusal assertion is meaningful)
+    nb = 256 if args.smoke else args.n_base
+    os.environ.setdefault(
+        "REPRO_DENSE_BYTES", str(sparse_mod.dense_fit_bytes(nb) - 1)
+    )
+    x_base, x_stream, backend, art, n_base, n_stream = _fit(args)
+
+    # the dense regime must refuse this n under the pinned budget
+    xb_host = jnp.asarray(np.asarray(x_base))
+    try:
+        ManifoldPipeline(
+            backend=LocalBackend(),
+            cfg=PipelineConfig(k=args.k, d=2, block=min(args.block, n_base)),
+        ).run(xb_host)
+    except sparse_mod.DenseBudgetError:
+        pass
+    else:
+        raise AssertionError(
+            f"dense pipeline fitted n={n_base} under "
+            f"REPRO_DENSE_BYTES={os.environ['REPRO_DENSE_BYTES']} - the "
+            "budget refusal regressed, this smoke is not testing the "
+            "sparse regime under pressure"
+        )
+
+    n_absorb = 16
+    x_absorb, x_query = x_stream[:n_absorb], x_stream[n_absorb:]
+    mapper = LandmarkStreamingMapper.from_artifacts(
+        art, k=args.k, batch=args.max_batch, backend=backend
+    )
+    m = int(mapper.lm_idx.shape[0])
+    service = BatchedMapperService(
+        mapper, max_batch=args.max_batch,
+        max_latency_ms=args.max_latency_ms,
+    )
+    with service:
+        service.warmup(x_stream.shape[1])
+        t0 = time.perf_counter()
+        pre = [service.submit(x_query[i]) for i in range(16)]
+        absorb_fut = service.submit_absorb(x_absorb)
+        mid = [service.submit(x_query[16 + i]) for i in range(16)]
+        for f in pre + mid:
+            assert f.result(timeout=60) is not None
+        report = absorb_fut.result(timeout=120)
+        post = [service.submit(p) for p in x_query[32:]]
+        y_post = np.concatenate([f.result(timeout=60) for f in post])
+    stats = service.stats()
+
+    assert report.absorbed > 0, report
+    assert mapper.version >= 1, mapper.version
+    assert mapper.n_base == n_base + report.absorbed, (
+        mapper.n_base, n_base, report.absorbed
+    )
+    assert mapper.panel.shape == (m, n_base + report.absorbed), (
+        mapper.panel.shape, m, n_base, report.absorbed
+    )
+    assert np.isfinite(y_post).all(), "post-absorb queries went non-finite"
+
+    # residency discipline on the write path: expand_panel must carry no
+    # (n, n)-shaped vars, neither at the old nor the grown size
+    g = report.absorbed
+    pz = jnp.zeros((m, n_base), jnp.float32)
+    ez = jnp.zeros((g, n_base), jnp.float32)
+    fz = jnp.zeros((g, g), jnp.float32)
+    jx = jax.make_jaxpr(update_mod.expand_panel)(pz, ez, fz)
+    for nn in (n_base, n_base + g):
+        bad = _shaped_vars(jx, (nn, nn))
+        assert bad == 0, (
+            f"expand_panel materializes {bad} ({nn}, {nn})-shaped jaxpr "
+            "vars - the sparse absorb densified"
+        )
+    assert _shaped_vars(jx, (m, n_base)) > 0, "jaxpr probe saw no panel"
+
+    row = {
+        "name": f"serving_sparse_absorb_{args.backend}",
+        "backend": args.backend,
+        "regime": "sparse",
+        "landmarks": m,
+        "absorbed": report.absorbed,
+        "version": mapper.version,
+        "p50_ms": stats["latency_p50_ms"],
+        "p99_ms": stats["latency_p99_ms"],
+    }
+    print("backend,regime,landmarks,absorbed,version,p50_ms,p99_ms")
+    print(",".join(str(row[c]) for c in list(row)[1:]))
+    write_bench_json([row])
     return row
 
 
 def run(args) -> list[dict]:
-    from repro.core.streaming import StreamingMapper
+    from repro.core.streaming import LandmarkStreamingMapper, StreamingMapper
     from repro.launch.serving import BatchedMapperService
 
     rates = args.rates
@@ -274,7 +415,11 @@ def run(args) -> list[dict]:
 
     x_base, x_stream, backend, art, n_base, n_stream = _fit(args)
 
-    mapper = StreamingMapper.from_artifacts(
+    mapper_cls = (
+        LandmarkStreamingMapper if getattr(args, "regime", "dense") == "sparse"
+        else StreamingMapper
+    )
+    mapper = mapper_cls.from_artifacts(
         art, k=args.k, batch=args.max_batch, backend=backend
     )
 
@@ -324,12 +469,24 @@ def main(argv=None):
         # must happen before any jax import in this process
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     if args.absorb:
+        if args.regime == "sparse":
+            return run_absorb_smoke_sparse(args)
         return run_absorb_smoke(args)
     print("backend,rate_pts_s,offered,p50_ms,p99_ms,mean_batch,"
           "sustained_pts_s")
     rows = run(args)
     # the queue must actually have coalesced and served everything
     assert rows and all(r["p50_ms"] == r["p50_ms"] for r in rows), rows
+    from run import write_bench_json
+
+    write_bench_json([
+        {
+            "name": f"serving_{args.regime}_{r['backend']}"
+                    f"_rate{r['rate_pts_s']:g}",
+            **r,
+        }
+        for r in rows
+    ])
     return rows
 
 

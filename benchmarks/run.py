@@ -16,10 +16,23 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      (asserted bit-identical and intermediate-free), and the
                      trace-time autotuner's tile choice vs the static
                      default under the shared roofline model.
+  * frontier_*     - sparse scale regime: landmark-panel geodesics vs the
+                     dense APSP at the same n (asserted faster above the
+                     crossover), the frontier autotuner's knobs vs the
+                     static default under the roofline model, and the
+                     (n, n)-free residency of the whole sparse path
+                     (asserted by jaxpr variable counting).
   * stage_*        - per-stage breakdown at a fixed n (kNN/APSP/center/eig).
+
+Every run also writes the collected rows to ``BENCH_<date>.json`` at the
+repo root (merged by row name into an existing same-day file, so the
+headline groups - apsp_phase2, frontier, and bench_serving.py's serving
+rows - accumulate into one artifact CI can upload).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -39,8 +52,52 @@ def _timeit(fn, *args, repeats=3, warmup=1):
     return min(ts)
 
 
+#: rows collected by :func:`_row` for the BENCH_<date>.json artifact
+_ROWS: list[dict] = []
+
+
 def _row(name, seconds, derived=""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    _ROWS.append({
+        "name": str(name),
+        "us_per_call": round(seconds * 1e6, 1),
+        "derived": str(derived),
+    })
+
+
+def bench_json_path() -> str:
+    """``BENCH_<date>.json`` at the repo root (the parent of this file's
+    directory) - one artifact per day, shared by every bench entrypoint."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.path.join(root, f"BENCH_{time.strftime('%Y-%m-%d')}.json")
+
+
+def write_bench_json(rows, path: str | None = None) -> str:
+    """Merge `rows` (dicts with a ``name`` key) into the day's BENCH json.
+
+    Later rows win on name collision, so re-running a group refreshes its
+    rows in place instead of duplicating them."""
+    path = path or bench_json_path()
+    merged: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                for r in json.load(fh).get("rows", []):
+                    merged[r.get("name", "")] = r
+        except (OSError, ValueError):
+            merged = {}
+    for r in rows:
+        merged[r["name"]] = dict(r)
+    payload = {
+        "date": time.strftime("%Y-%m-%d"),
+        "backend": jax.default_backend(),
+        "rows": list(merged.values()),
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    os.replace(tmp, path)
+    return path
 
 
 def bench_scaling():
@@ -285,6 +342,103 @@ def bench_apsp_phase2(smoke: bool = False):
             )
 
 
+def bench_frontier(smoke: bool = False):
+    """Sparse scale regime sweep (--only frontier; CI runs it --smoke).
+
+    Three claims, asserted rather than just reported:
+
+    1. above the crossover n, the landmark-panel geodesics beat the dense
+       blocked APSP wall-clock (same graph, the panel's m rows vs all n);
+    2. the frontier autotuner's (bs, bn, bucket) choice models no slower
+       than the static default under the shared roofline (measured too
+       when a real TPU backend is attached);
+    3. the jitted sparse path - CSR relaxation through panel embedding -
+       carries ZERO (n, n)-shaped jaxpr variables: peak residency stays
+       O(n k + m n) by construction, not by allocator luck.
+    """
+    from repro.core import apsp, graph, knn, sparse
+    from repro.core.landmarks import hierarchical_landmarks
+    from repro.data import euler_isometric_swiss_roll
+    from repro.kernels import autotune
+
+    n = 512 if smoke else 2048
+    k = 10
+    x, _ = euler_isometric_swiss_roll(n, seed=0)
+    x = jnp.asarray(x)
+    d_knn, i_knn = knn.knn_blocked(x, k=k, block=min(256, n))
+    nbr, w = graph.knn_to_padded_csr(d_knn, i_knn, n=n)
+    deg = nbr.shape[1]
+    m = sparse.default_landmarks(n)
+    lm = jnp.asarray(
+        hierarchical_landmarks(np.asarray(x), np.asarray(d_knn), m=m),
+        jnp.int32,
+    )
+    m = int(lm.shape[0])
+
+    # 1. crossover: the (m, n) panel vs the dense (n, n) APSP, wall-clock
+    g = graph.knn_to_graph(d_knn, i_knn, n=n)
+    t_dense = _timeit(
+        lambda: apsp.apsp_blocked(g, block=min(256, n)), repeats=2
+    )
+    t_sparse = _timeit(lambda: sparse.sssp_panel(nbr, w, lm), repeats=2)
+    assert t_sparse < t_dense, (
+        f"sparse panel ({t_sparse:.3f}s, m={m}) is not beating the dense "
+        f"APSP ({t_dense:.3f}s) at n={n} - the crossover regressed"
+    )
+    _row(
+        f"frontier_panel_m{m}_n{n}", t_sparse,
+        f"{t_dense / t_sparse:.2f}x_vs_dense_apsp",
+    )
+    _row(f"frontier_dense_apsp_n{n}", t_dense, "baseline")
+
+    # 2. autotuned knobs model no slower than the clamped static default
+    cfg, cost = autotune.best_frontier_config(n, deg, m)
+    dflt = autotune.FrontierConfig(
+        min(autotune.FRONTIER_DEFAULT.bs, autotune.frontier_batch(n, m)),
+        min(autotune.FRONTIER_DEFAULT.bn, n),
+        autotune.FRONTIER_DEFAULT.bucket,
+    )
+    dcost = autotune.frontier_cost(n, deg, dflt)
+    assert cost.time_s <= dcost.time_s * (1.0 + 1e-9), (
+        f"autotuned frontier config {cfg} models slower than the static "
+        f"default {dflt}"
+    )
+    _row(
+        "frontier_autotune", cost.time_s,
+        f"bs{cfg.bs}_bn{cfg.bn}_bucket{cfg.bucket}_"
+        f"{dcost.time_s / cost.time_s:.2f}x_vs_default_modeled",
+    )
+    if jax.default_backend() == "tpu":
+        t_tuned = _timeit(
+            lambda: sparse.sssp_panel(nbr, w, lm, cfg=cfg), repeats=3
+        )
+        t_dflt = _timeit(
+            lambda: sparse.sssp_panel(nbr, w, lm, cfg=dflt), repeats=3
+        )
+        _row(
+            "frontier_autotune_measured", t_tuned,
+            f"{t_dflt / t_tuned:.2f}x_vs_default",
+        )
+
+    # 3. residency: the whole jitted sparse path carries no (n, n) var
+    def sparse_path(nbr, w, lm):
+        panel = sparse.sssp_panel(nbr, w, lm)
+        return sparse.landmark_mds_general(panel, lm, d=2).embedding
+
+    jx = jax.make_jaxpr(sparse_path)(nbr, w, lm)
+    n_dense_vars = _shaped_vars(jx, (n, n))
+    n_panel_vars = _shaped_vars(jx, (m, n))
+    assert n_dense_vars == 0, (
+        f"sparse path materializes {n_dense_vars} (n, n)-shaped jaxpr "
+        "vars - the dense base is back"
+    )
+    assert n_panel_vars > 0, "jaxpr walk saw no (m, n) panel - bad probe"
+    _row(
+        "frontier_residency", 0.0,
+        f"nn_vars={n_dense_vars}_panel_vars={n_panel_vars}",
+    )
+
+
 def bench_spectral():
     """Alg. 2 convergence: iterations + time vs d."""
     from repro.core import centering, spectral
@@ -438,6 +592,7 @@ def bench_lm_smoke():
 _BENCHES = {
     "kernels": bench_kernels,
     "apsp_phase2": bench_apsp_phase2,
+    "frontier": bench_frontier,
     "scaling": bench_scaling,
     "blocksize": bench_blocksize,
     "spectral": bench_spectral,
@@ -479,6 +634,9 @@ def main() -> None:
         if "checkpoint_secs" in params:
             kwargs["checkpoint_secs"] = args.checkpoint_secs
         fn(**kwargs)
+    if _ROWS:
+        path = write_bench_json(_ROWS)
+        print(f"# wrote {len(_ROWS)} rows to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

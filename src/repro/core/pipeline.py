@@ -110,6 +110,11 @@ class PipelineConfig:
     block: int = 512       # logical block size b
     kernel_mode: str = "auto"
     lle_reg: float = 1e-3  # LLE local-Gram regularizer
+    # scale regime: "dense" = exact (n, n) path, "sparse" = landmark panel
+    # over the CSR graph (never materializes (n, n)), "auto" = dense while
+    # it fits the REPRO_DENSE_BYTES budget, sparse beyond (see stages_for)
+    regime: str = "auto"
+    landmarks: int = 0     # sparse-regime landmark budget (0 = sqrt-rule)
 
 
 # ------------------------------------------------------------ backends ----
@@ -218,6 +223,51 @@ class LocalBackend:
     def place_rows(self, x):
         """Place a (n, D) point set the way this backend serves it."""
         return jnp.asarray(x)
+
+    # --- sparse scale regime (landmark panel over the CSR graph) ---
+
+    #: landmark counts need no divisibility on one device
+    landmark_multiple = 1
+
+    def csr_graph(self, cfg: PipelineConfig, dists, idx, n: int):
+        return graph.knn_to_padded_csr(dists, idx, n=n)
+
+    def place_replicated(self, value):
+        return jnp.asarray(value)
+
+    def sparse_num_units(self, cfg: PipelineConfig, m: int, csr_shape):
+        from repro.core import sparse as sparse_mod
+        from repro.kernels import autotune
+
+        n, deg = csr_shape
+        fcfg = autotune.frontier_config(n, deg, m)
+        return sparse_mod.sparse_units(m, min(fcfg.bs, m))
+
+    def sparse_init(self, cfg: PipelineConfig, m: int, n: int):
+        return jnp.full((m, n), jnp.inf, dtype=jnp.float32)
+
+    def sparse_segment(
+        self, cfg: PipelineConfig, nbr, w, lm_idx, panel, lo: int, hi: int
+    ):
+        from repro.core import sparse as sparse_mod
+        from repro.kernels import autotune
+
+        n, deg = nbr.shape
+        m = lm_idx.shape[0]
+        fcfg = autotune.frontier_config(n, deg, m)
+        delta = sparse_mod.frontier_delta(w, fcfg.bucket)
+        return sparse_mod.sparse_panel_segment(
+            nbr, w, lm_idx, panel, jnp.int32(lo), jnp.int32(hi), delta,
+            bs=min(fcfg.bs, m), bucket=fcfg.bucket, bn=fcfg.bn,
+            mode=cfg.kernel_mode,
+        )
+
+    def sparse_embed(self, cfg: PipelineConfig, panel, lm_idx):
+        from repro.core import sparse as sparse_mod
+
+        return sparse_mod.landmark_mds_general(
+            panel, lm_idx, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
+        )
 
     # --- artifact placement (trivial on one device) ---
 
@@ -409,6 +459,83 @@ class MeshBackend:
             jnp.asarray(x), NamedSharding(self.mesh, P(self.data_axis))
         )
 
+    # --- sparse scale regime (landmark-batch sharding) ---
+
+    @property
+    def landmark_multiple(self) -> int:
+        """Landmark rows shard over the *folded* (data, model) axis —
+        every device, not every data row, owns an equal slice — so the
+        count must divide the device product."""
+        from repro.sharding.logical import mesh_axis_size
+
+        return mesh_axis_size(self.mesh, (self.data_axis, self.model_axis))
+
+    def csr_graph(self, cfg: PipelineConfig, dists, idx, n: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        nbr, w = graph.knn_to_padded_csr(dists, idx, n=n)
+        rep = NamedSharding(self.mesh, P())
+        return jax.device_put(nbr, rep), jax.device_put(w, rep)
+
+    def place_replicated(self, value):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(
+            jnp.asarray(value), NamedSharding(self.mesh, P())
+        )
+
+    def _sparse_cfg(self, m: int, n: int, deg: int):
+        from repro.kernels import autotune
+
+        ml = m // self.landmark_multiple
+        fcfg = autotune.frontier_config(n, deg, ml)
+        return ml, fcfg
+
+    def sparse_num_units(self, cfg: PipelineConfig, m: int, csr_shape):
+        from repro.core import sparse as sparse_mod
+
+        n, deg = csr_shape
+        ml, fcfg = self._sparse_cfg(m, n, deg)
+        return sparse_mod.sparse_units(ml, min(fcfg.bs, ml))
+
+    def sparse_init(self, cfg: PipelineConfig, m: int, n: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(
+            jnp.full((m, n), jnp.inf, dtype=jnp.float32),
+            NamedSharding(
+                self.mesh, P((self.data_axis, self.model_axis), None)
+            ),
+        )
+
+    def sparse_segment(
+        self, cfg: PipelineConfig, nbr, w, lm_idx, panel, lo: int, hi: int
+    ):
+        from repro.core import sparse as sparse_mod
+
+        n, deg = nbr.shape
+        m = lm_idx.shape[0]
+        ml, fcfg = self._sparse_cfg(m, n, deg)
+        fn = sparse_mod.make_sparse_segment_sharded(
+            self.mesh, m, n, deg, cfg.kernel_mode,
+            bs=min(fcfg.bs, ml), bucket=fcfg.bucket, bn=fcfg.bn,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+        delta = sparse_mod.frontier_delta(w, fcfg.bucket)
+        return fn(nbr, w, lm_idx, panel, jnp.int32(lo), jnp.int32(hi), delta)
+
+    def sparse_embed(self, cfg: PipelineConfig, panel, lm_idx):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import sparse as sparse_mod
+
+        # one replicating gather of the (m, n) panel — within the
+        # O(m n) residency bound; the MDS itself is O(m^2 + n m d)
+        # replicated compute, same policy as the dense landmark tail
+        panel_rep = jax.device_put(panel, NamedSharding(self.mesh, P()))
+        return sparse_mod.landmark_mds_general(
+            panel_rep, lm_idx, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
+        )
+
     # --- artifact placement (the elastic-restart hooks) ---
 
     def placement_of(self, value):
@@ -526,8 +653,14 @@ class GraphStage:
     provides = ("graph",)
 
     def run(self, ctx, art):
+        from repro.core.sparse import check_dense_budget
+
+        n = art["x"].shape[0]
+        # refuse before allocating anything O(n^2): beyond the byte
+        # budget the dense regime cannot hold its three (n, n) arrays
+        check_dense_budget(n)
         g = ctx.backend.graph(
-            ctx.cfg, art["knn_dists"], art["knn_idx"], n=art["x"].shape[0]
+            ctx.cfg, art["knn_dists"], art["knn_idx"], n=n
         )
         return {"graph": g}
 
@@ -654,6 +787,31 @@ def isomap_stages() -> list[Stage]:
 def lle_stages() -> list[Stage]:
     """LLE = shared kNN front + LLE-specific tail."""
     return [KNNStage(), LLEWeightsStage(), LLEEigenStage()]
+
+
+def stages_for(cfg: PipelineConfig, n: int) -> list[Stage]:
+    """Scale-regime selection: the stage chain for an n-point fit.
+
+    ``cfg.regime``: "dense" pins the exact (n, n) chain (the oracle —
+    still refused by GraphStage past the byte budget), "sparse" pins the
+    landmark-panel chain, "auto" picks dense exactly while its three
+    (n, n) arrays fit ``REPRO_DENSE_BYTES`` and sparse beyond — so small
+    fits keep bit-exact geodesics and big fits keep O(n k + m n)
+    residency, with no flag day in between."""
+    from repro.core import sparse as sparse_mod
+
+    regime = getattr(cfg, "regime", "auto")
+    if regime == "dense":
+        return isomap_stages()
+    if regime == "sparse":
+        return sparse_mod.sparse_isomap_stages(cfg.landmarks or None)
+    if regime == "auto":
+        if sparse_mod.dense_budget_ok(n):
+            return isomap_stages()
+        return sparse_mod.sparse_isomap_stages(cfg.landmarks or None)
+    raise ValueError(
+        f"unknown regime {regime!r} (expected dense/sparse/auto)"
+    )
 
 
 # ------------------------------------------------------------ pipeline ----

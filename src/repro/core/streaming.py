@@ -282,6 +282,16 @@ class StreamingMapper:
         self._updater = None
         self._absorb_lock = threading.Lock()
 
+    #: the updater class :meth:`absorb` instantiates on first use; None
+    #: means the default dense-regime :class:`repro.core.update.
+    #: GeodesicUpdater` (resolved lazily to keep the import one-way)
+    UPDATER_CLS = None
+
+    def _updater_cls(self):
+        from repro.core.update import GeodesicUpdater
+
+        return self.UPDATER_CLS or GeodesicUpdater
+
     # ------------------------------------------------- versioned state ----
 
     def snapshot(self):
@@ -346,11 +356,11 @@ class StreamingMapper:
                 f"artifacts {missing} absent from the fitted pipeline "
                 f"result (available: {sorted(artifacts)}"
                 + (f", exports: {sorted(exports)}" if exports else "")
-                + "); the pipeline must export x/geodesics/embedding "
-                "for streaming serving"
+                + f"); the pipeline must export "
+                f"{'/'.join(cls.SERVING_ARTIFACTS)} for streaming serving"
             )
         return cls(
-            artifacts["x"], artifacts["geodesics"], artifacts["embedding"],
+            *(artifacts[a] for a in cls.SERVING_ARTIFACTS),
             k=k, batch=batch, backend=backend, update=update,
         )
 
@@ -388,7 +398,8 @@ class StreamingMapper:
                 return mapper
         raise FileNotFoundError(
             f"no checkpoint in {manager.directory} holds the "
-            "x/geodesics/embedding artifacts (pipeline not run to eigen?)"
+            f"{'/'.join(cls.SERVING_ARTIFACTS)} artifacts (pipeline not "
+            "run through its serving stages?)"
         )
 
     def _map_batch(self, x_new: jax.Array, snap=None) -> jax.Array:
@@ -439,11 +450,11 @@ class StreamingMapper:
         never take it (update-log replay bypasses this entirely via
         :meth:`replay_update_log`).
         """
-        from repro.core.update import GeodesicUpdater, UpdateConfig
+        from repro.core.update import UpdateConfig
 
         with self._absorb_lock:
             if self._updater is None:
-                self._updater = GeodesicUpdater(
+                self._updater = self._updater_cls()(
                     self, self._update_cfg or UpdateConfig()
                 )
             return self._updater.absorb(x_new)
@@ -493,6 +504,107 @@ class StreamingMapper:
                         log_dir=os.path.join(checkpoint_dir, UPDATE_LOG_DIR),
                     )
                 self._update_cfg = cfg
-                self._updater = GeodesicUpdater(self, cfg)
+                self._updater = self._updater_cls()(self, cfg)
             self._updater.replay(x_all, flushes, gen=manifest.get("gen"))
         return int(x_all.shape[0])
+
+
+# --------------------------------------------------------- sparse regime ----
+
+
+class LandmarkStreamingMapper(StreamingMapper):
+    """Serves new-point queries from a sparse-regime fit.
+
+    Same serving/absorb surface as :class:`StreamingMapper`, but the
+    state is the sparse regime's export set — the (m, n) landmark panel
+    plus the fitted triangulation operator — so nothing O(n^2) is ever
+    resident.  Queries triangulate through the panel
+    (:func:`repro.core.sparse.map_new_points_panel`, O(batch * k * m)
+    per chunk); :meth:`absorb` folds accepted arrivals into the panel
+    columns via :class:`repro.core.update.LandmarkGeodesicUpdater`.
+
+    On a :class:`~repro.core.pipeline.MeshBackend` the serving state is
+    replicated across the mesh (it is O(m * n) — the sparse budget — and
+    the panel relaxation per query batch is small), which keeps the
+    serve and absorb paths backend-independent bit-for-bit.
+    """
+
+    SERVING_ARTIFACTS = (
+        "x", "panel", "lm_idx", "embedding", "lm_pinv", "lm_mean2",
+    )
+
+    def __init__(
+        self,
+        x_base: jax.Array,
+        panel: jax.Array,       # (m, n) landmark geodesics
+        lm_idx: jax.Array,      # (m,) landmark indices into the base
+        embedding: jax.Array,   # (n, d)
+        lm_pinv: jax.Array,     # (m, d) triangulation operator
+        lm_mean2: jax.Array,    # (m,) landmark-block row means
+        *,
+        k: int = 10,
+        batch: int = 256,
+        backend=None,
+        update=None,
+    ):
+        from repro.core.sparse import panel_row_mean_sq
+
+        n = x_base.shape[0]
+        m = lm_idx.shape[0]
+        assert panel.shape == (m, n), (panel.shape, m, n)
+        assert embedding.shape[0] == n, (embedding.shape, n)
+        assert lm_pinv.shape[0] == m and lm_mean2.shape == (m,), (
+            lm_pinv.shape, lm_mean2.shape, m,
+        )
+        if backend is None:
+            from repro.core.pipeline import LocalBackend
+
+            backend = LocalBackend()
+        self.backend = backend
+        self.k = min(k, n)
+        self.batch = batch
+        place = getattr(backend, "place_replicated", jnp.asarray)
+        self._versions = VersionedArtifacts({
+            "x": place(jnp.asarray(x_base)),
+            "panel": place(jnp.asarray(panel)),
+            "lm_idx": place(jnp.asarray(lm_idx)),
+            "embedding": place(jnp.asarray(embedding)),
+            "lm_pinv": place(jnp.asarray(lm_pinv)),
+            "lm_mean2": place(jnp.asarray(lm_mean2)),
+            # per-base-point mean-sq landmark geodesic: the gate's scale
+            "mean_sq": place(panel_row_mean_sq(jnp.asarray(panel))),
+        })
+        self._update_cfg = update
+        self._updater = None
+        self._absorb_lock = threading.Lock()
+
+    def _updater_cls(self):
+        from repro.core.update import LandmarkGeodesicUpdater
+
+        return self.UPDATER_CLS or LandmarkGeodesicUpdater
+
+    @property
+    def panel(self):
+        return self._versions.current["panel"]
+
+    @property
+    def lm_idx(self):
+        return self._versions.current["lm_idx"]
+
+    @property
+    def geodesics(self):
+        raise AttributeError(
+            "LandmarkStreamingMapper serves from the (m, n) landmark "
+            "panel; there is no (n, n) geodesics artifact in the sparse "
+            "regime (use .panel)"
+        )
+
+    def _map_batch(self, x_new: jax.Array, snap=None) -> jax.Array:
+        from repro.core.sparse import map_new_points_panel
+
+        snap = snap if snap is not None else self._versions.current
+        y, _ = map_new_points_panel(
+            x_new, snap["x"], snap["panel"], snap["lm_pinv"],
+            snap["lm_mean2"], k=self.k,
+        )
+        return y

@@ -162,6 +162,45 @@ def expand_geodesics_materializing(
     return jnp.concatenate([top, bot], axis=0)
 
 
+@functools.partial(jax.jit, static_argnames=("mode",))
+def expand_panel(
+    panel: jax.Array,  # (m, n) landmark geodesics of the base
+    e: jax.Array,      # (g, n) border edges arrival->base
+    f: jax.Array,      # (g, g) edges among the arrivals
+    *,
+    mode: str = "auto",
+) -> jax.Array:
+    """Expand the (m, n) landmark panel to (m, n+g) — the sparse regime's
+    absorb, never materializing anything O(n^2).
+
+    Landmark-mediated closure: paths between arrivals may route through
+    the base only via a landmark (the same approximation the sparse
+    regime's triangulation already makes), so the fold is
+
+      1. ``P_new = E (x) panel^T``          arrival->landmark through the
+                                            base (g, m)
+      2. ``S = min(F, P_new (x) P_new^T)``  arrival block, landmark-mediated
+      3. ``D = FW(min(S, S^T))``            close the (g, g) block
+      4. ``P_new' = min(P_new, D (x) P_new)``  multi-arrival hops
+      5. ``panel' = min(panel, P_new'^T (x) E)``  shorter landmark->base
+                                            routes through the arrivals
+      6. concat ``panel'`` with ``P_new'^T``  -> (m, n+g)
+
+    Steps 2/4/5 use the seeded fused kernels, so no min-plus product
+    intermediate is materialized (same discipline as
+    :func:`expand_geodesics`); every array is (g, n), (g, m), (g, g) or
+    (m, n).  Exact on the landmark-mediated metric; agrees with a
+    sparse-regime refit over base + arrivals to triangulation tolerance.
+    """
+    p_new = ops.minplus(e, panel.T, mode=mode)            # (g, m)
+    s = ops.minplus_update(f, p_new, p_new.T, mode=mode)  # (g, g)
+    s = jnp.minimum(s, s.T)
+    d = ops.floyd_warshall(s, mode=mode)                  # close arrivals
+    p_new = ops.minplus_panel_row(d, p_new, mode=mode)    # (g, m)
+    panel = ops.minplus_update(panel, p_new.T, e, mode=mode)   # (m, n)
+    return jnp.concatenate([panel, p_new.T], axis=1)      # (m, n+g)
+
+
 def augmented_graph(x_base, x_new, *, k: int, base_graph=None):
     """The (n+m, n+m) augmented adjacency the absorb path closes: the
     base kNN graph block plus the arrivals' :func:`border_edges`,
@@ -559,3 +598,47 @@ class GeodesicUpdater:
             xs.append(data["x"])
             flushes.extend(int(s) for s in manifest.get("flushes", []))
         return np.concatenate(xs, axis=0), flushes, newest
+
+
+class LandmarkGeodesicUpdater(GeodesicUpdater):
+    """Absorb engine of the sparse regime: folds accepted arrivals into
+    the (m, n) landmark panel instead of the (n, n) base matrix.
+
+    Owned by a :class:`~repro.core.streaming.LandmarkStreamingMapper`;
+    gating, buffering, flush grouping, and the durable update log are all
+    inherited — only the expansion differs (:func:`expand_panel` plus a
+    landmark-MDS re-embed, everything O(m * (n+g))).  The landmark set is
+    fixed at fit time: arrivals densify the panel's columns, they never
+    become landmarks (the "initial batch is large" assumption again — the
+    fitted landmarks already cover the manifold the arrivals land on).
+    """
+
+    def _expand(self, group: np.ndarray):
+        from repro.core.sparse import (
+            landmark_mds_general, panel_row_mean_sq,
+        )
+
+        mapper = self.mapper
+        backend = mapper.backend
+        snap = mapper.snapshot()
+        # edge construction on the gathered base (same backend-independence
+        # rationale as the dense absorb: kNN ties must not flip per shard)
+        xb = np.asarray(snap["x"])
+        e, f = border_edges(
+            jnp.asarray(group), jnp.asarray(xb), k=mapper.k
+        )
+        grown = expand_panel(jnp.asarray(np.asarray(snap["panel"])), e, f)
+        out = landmark_mds_general(
+            grown, jnp.asarray(np.asarray(snap["lm_idx"])),
+            d=snap["embedding"].shape[1],
+            max_iter=self.cfg.max_iter, tol=self.cfg.tol,
+        )
+        place = getattr(backend, "place_replicated", jnp.asarray)
+        mapper._publish(
+            x=place(jnp.asarray(np.concatenate([xb, group], axis=0))),
+            panel=place(grown),
+            embedding=place(out.embedding),
+            lm_pinv=place(out.pinv),
+            lm_mean2=place(out.mean2),
+            mean_sq=place(panel_row_mean_sq(grown)),
+        )

@@ -264,6 +264,189 @@ def tiles_for(op: str, m: int, n: int, k: int, *, itemsize: int = 4) -> dict:
     return cfg._asdict()
 
 
+# ------------------------------------------------------- frontier kernel --
+# Knobs of the sparse frontier-relaxation kernel (repro.kernels.frontier)
+# and its SSSP driver (repro.core.sparse.sssp_panel).  Unlike the min-plus
+# family, the tunables span two layers: ``bn`` is the kernel's node-tile
+# width, while ``bs`` (sources resident per launch) and ``bucket`` (masked
+# sweeps per convergence check) are driver-level — they are tuned together
+# because VMEM residency couples them: the whole (bs, n) distance block
+# stays resident across the node grid.
+
+ENV_FRONTIER_TILES = "REPRO_FRONTIER_TILES"
+ENV_FRONTIER_AUTOTUNE = "REPRO_FRONTIER_AUTOTUNE"
+
+#: prior on sweeps-to-settle (the kNN graph's hop diameter); only the
+#: *ratio* of check cost to sweep cost times this prior steers ``bucket``,
+#: so a mis-estimate moves the knob logarithmically.
+FRONTIER_SWEEPS_PRIOR = 32
+
+
+class FrontierConfig(NamedTuple):
+    """Static knobs of one sparse-geodesic solve."""
+
+    bs: int      # landmark sources resident per kernel launch
+    bn: int      # node columns per grid step
+    bucket: int  # masked sweeps between convergence checks
+
+
+FRONTIER_DEFAULT = FrontierConfig(bs=8, bn=1024, bucket=4)
+
+
+def frontier_cost(
+    n: int, deg: int, cfg: FrontierConfig, *, itemsize: int = 4
+) -> Cost:
+    """Roofline terms for one *effective* masked sweep of the frontier
+    kernel: the sweep itself plus its amortized share of the convergence
+    check and the expected bucket-overshoot waste.
+
+    Per sweep the VPU does 3 ops per (source, node, lane) triple (mask
+    select, add, running min); HBM moves the resident (bs, n) distances
+    in and out once plus the (n, deg) nbr/w pair.  The convergence check
+    is an (bs, n) reduction charged once per ``bucket`` sweeps; overshoot
+    charges the (bucket-1)/2 sweeps expected to run past the settle point,
+    spread over :data:`FRONTIER_SWEEPS_PRIOR` productive sweeps.
+
+    ``time_s`` is normalized **per landmark source** (divided by ``bs``)
+    so configs with different batch sizes are comparable: a bigger batch
+    amortizes the (n, deg) nbr/w stream over more sources.
+    """
+    bs, bn, bucket = cfg
+    lane_fill = min(bn, 128) / 128.0
+    sublane_fill = min(bs, 8) / 8.0
+    compute_s = (3.0 * bs * n * deg) / (VPU_OPS * lane_fill * sublane_fill)
+    hbm_bytes = itemsize * (
+        bs * n          # resident distance read
+        + 2 * n * deg   # nbr + w stream
+        + bs * n        # output write
+    )
+    hbm_s = hbm_bytes / HBM_BW
+    sweep_s = max(compute_s, hbm_s)
+    check_s = itemsize * bs * n / HBM_BW
+    time_s = (
+        sweep_s * (1.0 + (bucket - 1) / (2.0 * FRONTIER_SWEEPS_PRIOR))
+        + check_s / bucket
+    ) / bs
+    # resident distances + double-buffered nbr/w tiles + the (bs, bn, deg)
+    # gather intermediate + current/output tiles
+    vmem = itemsize * (
+        bs * n + 2 * 2 * bn * deg + bs * bn * deg + 2 * bs * bn
+    )
+    return Cost(
+        time_s=time_s,
+        compute_s=compute_s,
+        hbm_s=hbm_s,
+        hbm_bytes=float(hbm_bytes),
+        vmem_bytes=vmem,
+    )
+
+
+def frontier_batch(n: int, m: int, *, itemsize: int = 4) -> int:
+    """Largest landmark-batch size whose resident (bs, n) distance block
+    leaves half the VMEM budget for tiles and the gather intermediate.
+    Single source of the residency bound the driver and the stage
+    segmentation both use (units = ceil(m / frontier_batch))."""
+    cap = max(1, (VMEM_BUDGET // 2) // max(1, n * itemsize))
+    bs = 1
+    while bs * 2 <= min(cap, m, 64):
+        bs *= 2
+    return bs
+
+
+def frontier_candidates(
+    n: int, deg: int, m: int
+) -> Iterator[FrontierConfig]:
+    """Enumerate frontier configs: power-of-two source batches up to the
+    residency cap, node tiles (ops.py pads n to a multiple, so no
+    divisibility constraint), buckets 1..16."""
+    bs_cap = frontier_batch(n, m)
+    for bs in (1, 2, 4, 8, 16, 32, 64):
+        if bs > bs_cap:
+            break
+        for bn in (128, 256, 512, 1024, 2048, 4096):
+            if bn > n and bn != 128:
+                continue
+            for bucket in (1, 2, 4, 8, 16):
+                yield FrontierConfig(bs, min(bn, n), bucket)
+
+
+@functools.lru_cache(maxsize=4096)
+def best_frontier_config(
+    n: int, deg: int, m: int, *, itemsize: int = 4
+) -> tuple[FrontierConfig, Cost]:
+    """Sweep :func:`frontier_candidates` under :func:`frontier_cost`; the
+    (clamped) default is part of the sweep so the winner never models
+    slower than it.  Candidates busting VMEM fall back to the smallest
+    working set."""
+    best = None
+    fallback = None
+    seen = set()
+    dflt = FrontierConfig(
+        min(FRONTIER_DEFAULT.bs, frontier_batch(n, m)),
+        min(FRONTIER_DEFAULT.bn, n),
+        FRONTIER_DEFAULT.bucket,
+    )
+    for cfg in list(frontier_candidates(n, deg, m)) + [dflt]:
+        if cfg in seen:
+            continue
+        seen.add(cfg)
+        cost = frontier_cost(n, deg, cfg, itemsize=itemsize)
+        fkey = (cost.vmem_bytes, cost.time_s)
+        if fallback is None or fkey < fallback[0]:
+            fallback = (fkey, cfg, cost)
+        if cost.vmem_bytes > VMEM_BUDGET:
+            continue
+        key = (cost.time_s, -cfg.bs, -cfg.bn)
+        if best is None or key < best[0]:
+            best = (key, cfg, cost)
+    if best is None:
+        best = fallback
+    return best[1], best[2]
+
+
+def _parse_frontier_override(raw: str) -> FrontierConfig:
+    parts = raw.split(",")
+    if len(parts) != 3:
+        raise ValueError(
+            f"{ENV_FRONTIER_TILES}={raw!r}: expected 'bs,bn,bucket' "
+            "(three comma-separated ints)"
+        )
+    try:
+        bs, bn, bucket = (int(p) for p in parts)
+    except ValueError as e:
+        raise ValueError(f"{ENV_FRONTIER_TILES}={raw!r}: {e}") from None
+    if min(bs, bn, bucket) < 1:
+        raise ValueError(f"{ENV_FRONTIER_TILES}={raw!r}: knobs must be >= 1")
+    return FrontierConfig(bs, bn, bucket)
+
+
+def frontier_config(n: int, deg: int, m: int) -> FrontierConfig:
+    """Resolve the frontier knobs for one sparse-geodesic solve.
+
+    Resolution order mirrors :func:`tiles_for`:
+
+    1. ``REPRO_FRONTIER_TILES=bs,bn,bucket`` — pinned.
+    2. ``REPRO_FRONTIER_AUTOTUNE=0`` — the static default, batch clamped
+       to the VMEM residency cap.
+    3. Otherwise the cached roofline sweep
+       (:func:`best_frontier_config`).
+    """
+    raw = os.environ.get(ENV_FRONTIER_TILES)
+    if raw:
+        return _parse_frontier_override(raw)
+    if os.environ.get(ENV_FRONTIER_AUTOTUNE, "1").lower() in (
+        "0", "false", "off"
+    ):
+        return FrontierConfig(
+            min(FRONTIER_DEFAULT.bs, frontier_batch(n, m)),
+            min(FRONTIER_DEFAULT.bn, n),
+            FRONTIER_DEFAULT.bucket,
+        )
+    cfg, _ = best_frontier_config(n, deg, m)
+    return cfg
+
+
 def clear_cache() -> None:
     """Drop the in-process sweep cache (tests / constant hot-swapping)."""
     best_config.cache_clear()
+    best_frontier_config.cache_clear()

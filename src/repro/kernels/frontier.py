@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: masked sparse frontier relaxation (delta-stepping
+sweep) over the padded-CSR kNN graph.
+
+One bucketed delta-stepping / masked Bellman-Ford sweep for a batch of
+``s`` sources against a fixed-shape adjacency::
+
+    O[q, j] = min(D[q, j],  min_d  mask(D[q, nbr[j, d]]) + w[j, d])
+    mask(x) = x            if x < hi
+              +inf         otherwise
+
+where ``nbr`` (n, deg) / ``w`` (n, deg) are the padded-CSR neighbour
+lists (padded lanes carry ``w = +inf`` so they never win the min) and
+``hi`` is the current bucket's upper bound: tentative distances at or
+above ``hi`` are not allowed to propagate this sweep, which is both the
+delta-stepping bucket discipline and the mask that keeps half-settled
+long-range values from being charged as settled.
+
+Layout: the whole (s, n) distance block stays resident in VMEM (constant
+index map) because every node tile gathers from arbitrary columns; the
+grid runs over node tiles only.  The driver
+(:func:`repro.core.sparse.sssp_panel`) keeps ``s`` small enough that
+``s * n`` floats fit the budget — :func:`repro.kernels.autotune
+.frontier_batch` is the single source of that bound.  The gather is a
+``jnp.take`` from the resident block; on TPU this lowers to a dynamic
+gather, which Mosaic supports for VMEM-resident operands (off TPU the
+kernel runs in interpret mode where the gather is ordinary XLA).
+
+The kernel jits once per (s, n, deg, bn) shape: the driver pads frontiers
+to fixed shape so bucket progression never recompiles, and ``hi`` enters
+as a (1, 1) array operand rather than a static constant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _tpu_compiler_params():
+    """dimension_semantics for the 1-D node-tile grid (None off-TPU).
+
+    Mirrors :func:`repro.kernels.minplus._tpu_compiler_params` but with a
+    single parallel grid dimension — every node tile is independent."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams", None
+        )
+        if cls is not None:
+            return cls(dimension_semantics=("parallel",))
+    except ImportError:
+        pass
+    return None
+
+
+def _frontier_kernel(hi_ref, dist_ref, nbr_ref, w_ref, o_ref):
+    hi = hi_ref[0, 0]
+    dist = dist_ref[...]            # (s, n), resident across the grid
+    idx = nbr_ref[...]              # (bn, deg)
+    wt = w_ref[...]                 # (bn, deg)
+    s = dist.shape[0]
+    bn, deg = idx.shape
+
+    # gather -> threshold mask -> relax -> seed-min, in this exact order;
+    # the CSR oracle (ref.frontier_relax_ref) replays the same sequence so
+    # results are bit-identical (min is exact, add is one rounding per
+    # term in both).
+    g = jnp.take(dist, idx.reshape(-1), axis=1).reshape(s, bn, deg)
+    g = jnp.where(g < hi, g, jnp.inf)
+    cand = jnp.min(g + wt[None, :, :], axis=2)          # (s, bn)
+    j = pl.program_id(0)
+    cur = jax.lax.dynamic_slice(dist, (0, j * bn), (s, bn))
+    o_ref[...] = jnp.minimum(cur, cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def frontier_relax(
+    dist: jax.Array,
+    nbr: jax.Array,
+    w: jax.Array,
+    hi: jax.Array,
+    *,
+    bn: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """One masked frontier sweep: O[q,j] = min(D[q,j],
+    min_d where(D[q, nbr[j,d]] < hi) + w[j,d]).
+
+    Shapes: dist (s, n), nbr (n, deg) int32, w (n, deg) -> (s, n).
+    ``hi`` is a scalar (traced, so bucket progression does not recompile).
+    """
+    s, n = dist.shape
+    n2, deg = nbr.shape
+    assert n == n2 and w.shape == nbr.shape, (dist.shape, nbr.shape, w.shape)
+    bn = min(bn, n)
+    assert n % bn == 0, (
+        f"n={n} not divisible by node tile bn={bn} "
+        "(ops.frontier_relax pads to a tile multiple)"
+    )
+    hi = jnp.asarray(hi, dist.dtype).reshape(1, 1)
+
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((s, n), lambda j: (0, 0)),
+            pl.BlockSpec((bn, deg), lambda j: (j, 0)),
+            pl.BlockSpec((bn, deg), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), dist.dtype),
+        compiler_params=_tpu_compiler_params(),
+        interpret=interpret,
+    )(hi, dist, nbr, w)

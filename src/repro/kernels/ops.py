@@ -36,6 +36,7 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import autotune
 from repro.kernels import ref as _ref
@@ -46,6 +47,7 @@ from repro.kernels.minplus_panel import (
     minplus_panel_col as _mpc_pallas,
     minplus_panel_row as _mpr_pallas,
 )
+from repro.kernels.frontier import frontier_relax as _fr_pallas
 from repro.kernels.minplus_update import minplus_update as _mpu_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
 
@@ -209,6 +211,45 @@ def minplus_border(e, a, *, mode: str = "auto", **tile_kw):
     if use_pallas:
         return _mb_pallas(e, a, interpret=interpret, **tile_kw)
     return _ref.minplus_border_ref(e, a)
+
+
+def frontier_relax(dist, nbr, w, hi, *, mode: str = "auto", **tile_kw):
+    """One masked frontier-relaxation sweep over the padded-CSR graph:
+    O[q,j] = min(D[q,j], min_d where(D[q, nbr[j,d]] < hi) + w[j,d]).
+
+    dist (s, n), nbr/w (n, deg), hi scalar -> (s, n).  The only tile knob
+    is ``bn`` (node columns per grid step); without it the frontier
+    autotuner picks per-shape (``REPRO_FRONTIER_TILES=bs,bn,bucket`` pins
+    all three driver knobs, :func:`repro.kernels.autotune
+    .frontier_config`).  ``n`` is padded internally to a ``bn`` multiple
+    with +inf-weight self-edges, so padded lanes never win the min and
+    real columns are bit-identical to the unpadded oracle.
+    """
+    s, n = dist.shape
+    deg = nbr.shape[1]
+    unknown = set(tile_kw) - {"bn"}
+    if unknown:
+        raise ValueError(
+            f"frontier_relax: unknown tile kwargs {sorted(unknown)} "
+            "(expected bn)"
+        )
+    bn = tile_kw.get("bn")
+    if bn is None:
+        bn = autotune.frontier_config(n, deg, s).bn
+    if not isinstance(bn, int) or bn < 1:
+        raise ValueError(f"frontier_relax: tile bn={bn!r} must be a "
+                         "positive int")
+    bn = min(bn, n)
+    use_pallas, interpret = _resolve(mode)
+    if not use_pallas:
+        return _ref.frontier_relax_ref(dist, nbr, w, hi)
+    pad = -n % bn
+    if pad:
+        dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        nbr = jnp.pad(nbr, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    out = _fr_pallas(dist, nbr, w, hi, bn=bn, interpret=interpret)
+    return out[:, :n] if pad else out
 
 
 def floyd_warshall(d, *, mode: str = "auto"):

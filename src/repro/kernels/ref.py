@@ -116,6 +116,58 @@ def minplus_border_ref(
     return minplus_update_ref(e, e, a, chunk=chunk)
 
 
+def frontier_relax_ref(
+    dist: jax.Array,
+    nbr: jax.Array,
+    w: jax.Array,
+    hi,
+    *,
+    chunk: int = 4096,
+) -> jax.Array:
+    """Masked sparse frontier-relaxation oracle (one delta-stepping sweep).
+
+    O[q, j] = min(D[q, j], min_d mask(D[q, nbr[j, d]]) + w[j, d]) with
+    mask(x) = x where x < hi else +inf.  dist (s, n), nbr (n, deg) int32,
+    w (n, deg) -> (s, n); padded CSR lanes carry w = +inf so they never
+    win the min.
+
+    Replays the Pallas kernel's exact op order per element (gather ->
+    threshold mask -> broadcast-add -> min-reduce -> seed-min), so the
+    result is bit-identical to :func:`repro.kernels.frontier
+    .frontier_relax` for any node tiling: min is exact and the add is a
+    single rounding per term in both.  Computed in node chunks so the
+    (s, chunk, deg) gather intermediate stays bounded.
+    """
+    s, n = dist.shape
+    n2, deg = nbr.shape
+    assert n == n2 and w.shape == nbr.shape, (dist.shape, nbr.shape, w.shape)
+    hi = jnp.asarray(hi, dist.dtype)
+    chunk = min(chunk, n)
+    pad = -n % chunk
+    dist_p = dist
+    if pad:
+        # padded nodes: dist +inf, edges to node 0 with weight +inf — they
+        # relax to +inf and are sliced off, never touching real columns
+        dist_p = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        nbr = jnp.pad(nbr, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    steps = (n + pad) // chunk
+
+    def body(c, out):
+        ni = jax.lax.dynamic_slice(nbr, (c * chunk, 0), (chunk, deg))
+        wi = jax.lax.dynamic_slice(w, (c * chunk, 0), (chunk, deg))
+        g = jnp.take(dist_p, ni.reshape(-1), axis=1).reshape(s, chunk, deg)
+        g = jnp.where(g < hi, g, jnp.inf)
+        cand = jnp.min(g + wi[None, :, :], axis=2)      # (s, chunk)
+        cur = jax.lax.dynamic_slice(dist_p, (0, c * chunk), (s, chunk))
+        return jax.lax.dynamic_update_slice(
+            out, jnp.minimum(cur, cand), (0, c * chunk)
+        )
+
+    out = jax.lax.fori_loop(0, steps, body, jnp.zeros_like(dist_p))
+    return out[:, :n] if pad else out
+
+
 def floyd_warshall_ref(d: jax.Array) -> jax.Array:
     """In-block Floyd-Warshall: all-pairs shortest paths on a dense block.
 

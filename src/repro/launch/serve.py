@@ -116,6 +116,8 @@ def serve_manifold(
     checkpoint_secs: float | None = None,
     absorb: int = 0,
     mesh_shape: tuple[int, int] | None = None,
+    regime: str = "auto",
+    landmarks: int = 0,
     seed: int = 0,
 ):
     """Fit the staged Isomap pipeline on a base batch, then serve streamed
@@ -140,12 +142,18 @@ def serve_manifold(
     geodesics through the service's write path (admission-controlled,
     runs between read flushes) before serving the rest.
     mesh_shape: (data, model) device grid; None serves single-device.
+    regime/landmarks: scale-regime selection
+    (:func:`repro.core.pipeline.stages_for`) - "dense" pins the exact
+    (n, n) chain, "sparse" the landmark-panel chain (serving and absorb
+    then run through :class:`LandmarkStreamingMapper`, never touching
+    anything O(n^2)), "auto" picks by the ``REPRO_DENSE_BYTES`` budget.
     Returns timing + per-request latency percentiles + quality."""
     from repro.core import metrics
     from repro.core.pipeline import (
         LocalBackend, ManifoldPipeline, MeshBackend, PipelineConfig,
+        stages_for,
     )
-    from repro.core.streaming import StreamingMapper
+    from repro.core.streaming import LandmarkStreamingMapper, StreamingMapper
     from repro.data import euler_isometric_swiss_roll
     from repro.launch.serving import BatchedMapperService
 
@@ -185,8 +193,14 @@ def serve_manifold(
 
         checkpoint = CheckpointManager(checkpoint_dir)
 
+    pcfg = PipelineConfig(
+        k=k, d=d, block=block, regime=regime, landmarks=landmarks
+    )
+    stages = stages_for(pcfg, n_base)
+    sparse_fit = any(s.name == "sparse_geodesics" for s in stages)
     pipe = ManifoldPipeline(
-        cfg=PipelineConfig(k=k, d=d, block=block),
+        stages,
+        cfg=pcfg,
         backend=backend or LocalBackend(checkpoint_secs=checkpoint_secs),
         checkpoint=checkpoint,
     )
@@ -204,7 +218,8 @@ def serve_manifold(
         update_cfg = UpdateConfig(
             log_dir=os.path.join(checkpoint_dir, UPDATE_LOG_DIR)
         )
-    mapper = StreamingMapper.from_artifacts(
+    mapper_cls = LandmarkStreamingMapper if sparse_fit else StreamingMapper
+    mapper = mapper_cls.from_artifacts(
         art, k=k, batch=stream_batch, backend=backend, update=update_cfg
     )
     if resume and checkpoint_dir:
@@ -254,6 +269,7 @@ def serve_manifold(
         "n_stream": n_stream,
         "absorbed": n_absorbed,
         "serving_version": mapper.version,
+        "regime": "sparse" if sparse_fit else "dense",
     }
 
 
@@ -317,6 +333,17 @@ def build_parser() -> argparse.ArgumentParser:
         help="serve sharded over a (data, model) device grid, e.g. 4x2 "
         "(device count must be available; set XLA_FLAGS for fake CPUs)",
     )
+    ap.add_argument(
+        "--regime", choices=("auto", "dense", "sparse"), default="auto",
+        help="scale regime: dense pins the exact (n, n) chain, sparse "
+        "the landmark-panel chain (O(n k + m n) residency; serving and "
+        "absorb run through the panel), auto picks by the "
+        "REPRO_DENSE_BYTES budget",
+    )
+    ap.add_argument(
+        "--landmarks", type=int, default=0,
+        help="sparse-regime landmark budget m (0: ~4 sqrt(n) default)",
+    )
     return ap
 
 
@@ -345,9 +372,12 @@ def main():
             checkpoint_secs=args.checkpoint_secs,
             absorb=args.absorb,
             mesh_shape=mesh_shape,
+            regime=args.regime,
+            landmarks=args.landmarks,
         )
         print(
-            f"[serve manifold] fit={out['fit_s']:.2f}s "
+            f"[serve manifold] regime={out['regime']} "
+            f"fit={out['fit_s']:.2f}s "
             f"serve={out['serve_s']:.3f}s "
             f"({out['points_per_s']:.0f} pts/s) "
             f"p50={out['latency_p50_ms']:.1f}ms "
