@@ -1,0 +1,697 @@
+"""Embedding objectives: one interface across dense / sparse / streaming.
+
+Every regime of the pipeline ends the same way — a geodesic system (the
+dense (n, n) matrix or the sparse (m, n) landmark panel) is turned into
+coordinates — and until this layer that tail was hardcoded in five
+places (dense ``CenterStage``+``EigenStage``, ``SparseEmbedStage``'s
+landmark MDS, the LLE eigen tail, and the re-embeds inside both
+updaters).  :class:`EmbeddingObjective` is the seam: an objective
+declares how to
+
+(a) **embed** a fitted geodesic system (``dense_stages`` contributes the
+    tail of the dense chain; ``embed_panel`` embeds the landmark panel),
+(b) **map out-of-sample points** against a serving snapshot
+    (``map_new_points`` dense, ``map_new_points_panel`` sparse), and
+(c) **re-embed after an absorb** (``reembed_dense`` / ``reembed_panel``,
+    called by the updaters in :mod:`repro.core.update`),
+
+so ``pipeline.stages_for``, both backends, the streaming mappers and the
+updaters all dispatch through it instead of calling ``center``/``eigen``
+directly.  Objectives are identified by name in
+``PipelineConfig.objective`` (which enters the resume fingerprint — a
+spectral checkpoint is never resumed as a stress answer) and selected at
+the CLI via ``serve.py --objective``.
+
+Three objectives ship:
+
+* :class:`SpectralMDS` — the paper's classical-MDS tail, bit-identical
+  to the pre-refactor output (asserted in tier-1).
+* :class:`StressMDS` — Sammon-weighted stress minimized with the in-repo
+  AdamW (:mod:`repro.optim.adamw`), initialized from the spectral
+  solution, working on either the (n, n) matrix or the (m, n) panel
+  (Ghojogh et al., MDS/Sammon/Isomap survey, PAPERS.md).
+* :class:`PathIsomap` — path-based isometric mapping in the spirit of
+  Najafi et al. (PAPERS.md): reference shortest paths between
+  farthest-point endpoints are recovered from the *existing* APSP /
+  frontier geodesics (j lies on a shortest a-b path iff
+  d(a,j) + d(j,b) = d(a,b)), and the embedding is a landmark MDS whose
+  landmarks are exactly the on-path points — the shortest-path structure
+  is reused verbatim, no new graph computation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+# ------------------------------------------------------- stress kernels ----
+
+
+def _sammon_terms(t: jax.Array):
+    """Validity mask, Sammon weights 1/t, and the classic normalizer
+    sum(t) over valid pairs.  Self-pairs (t == 0) and clamped-infinite
+    entries carry zero weight, so their non-differentiable distance terms
+    never reach the gradient."""
+    valid = (t > 0) & jnp.isfinite(t)
+    w = jnp.where(valid, 1.0 / jnp.where(valid, t, 1.0), 0.0)
+    denom = jnp.maximum(jnp.sum(jnp.where(valid, t, 0.0)), 1e-12)
+    return w, denom
+
+
+def _sammon_stress(y_ref, y, t, w, denom):
+    """Sammon stress between rows ``y_ref`` (r, d) and all points ``y``
+    (n, d) against target distances ``t`` (r, n)."""
+    d2 = jnp.sum((y_ref[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    # guard the sqrt twice: where w == 0 the pair must not emit NaN
+    # grads (0 * nan = nan), and where a weighted pair is exactly
+    # coincident (stress placement seeds new points AT their nearest
+    # anchor) sqrt'(0) = inf - the floor keeps the gradient finite at a
+    # bias of 1e-6 on unit-scale coordinates
+    d = jnp.sqrt(jnp.where(w > 0, jnp.maximum(d2, 1e-12), 1.0))
+    resid = jnp.where(w > 0, d - t, 0.0)
+    return jnp.sum(w * jnp.square(resid)) / denom
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr"))
+def stress_minimize(
+    t: jax.Array,        # (r, n) target distances (rows = ref_idx points)
+    ref_idx: jax.Array,  # (r,) indices of the rows into the n points
+    y0: jax.Array,       # (n, d) initial coordinates (the spectral init)
+    *,
+    steps: int = 200,
+    lr: float = 0.05,
+):
+    """Minimize Sammon stress of all n points against the target rows.
+
+    Coordinates and targets are normalized to unit RMS target distance so
+    the (static) learning rate is scale-free; Sammon stress itself is
+    scale-invariant, so the returned values compare across datasets.
+    Returns (y, stress, stress_init)."""
+    scale = jnp.sqrt(
+        jnp.maximum(
+            jnp.mean(jnp.where(jnp.isfinite(t), jnp.square(t), 0.0)), 1e-24
+        )
+    )
+    tn = t / scale
+    w, denom = _sammon_terms(tn)
+    loss = lambda z: _sammon_stress(z[ref_idx], z, tn, w, denom)  # noqa: E731
+
+    acfg = AdamWConfig(
+        lr=lr, weight_decay=0.0, grad_clip=1e3,
+        warmup_steps=0, total_steps=steps, min_lr_frac=0.05,
+    )
+    z0 = y0 / scale
+    state = {
+        "m": {"z": jnp.zeros_like(z0)},
+        "v": {"z": jnp.zeros_like(z0)},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+    def body(_, carry):
+        z, st = carry
+        g = jax.grad(loss)(z)
+        p, st, _ = adamw_update(acfg, {"z": g}, st, {"z": z})
+        return p["z"], st
+
+    z, _ = jax.lax.fori_loop(0, steps, body, (z0, state))
+    return z * scale, loss(z), loss(z0)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr"))
+def stress_place(
+    t: jax.Array,      # (b, r) target distances from new points to refs
+    y_ref: jax.Array,  # (r, d) fixed reference coordinates
+    y0: jax.Array,     # (b, d) initial coordinates per new point
+    *,
+    steps: int = 80,
+    lr: float = 0.05,
+):
+    """Out-of-sample stress placement: refine only the new points'
+    coordinates against the fixed reference frame (the base embedding
+    stays put — serving must not drift the manifold)."""
+    scale = jnp.sqrt(
+        jnp.maximum(
+            jnp.mean(jnp.where(jnp.isfinite(t), jnp.square(t), 0.0)), 1e-24
+        )
+    )
+    tn = t / scale
+    w, denom = _sammon_terms(tn)
+    zr = y_ref / scale
+    loss = lambda z: _sammon_stress(z, zr, tn, w, denom)  # noqa: E731
+
+    acfg = AdamWConfig(
+        lr=lr, weight_decay=0.0, grad_clip=1e3,
+        warmup_steps=0, total_steps=steps, min_lr_frac=0.05,
+    )
+    z0 = y0 / scale
+    state = {
+        "m": {"z": jnp.zeros_like(z0)},
+        "v": {"z": jnp.zeros_like(z0)},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+    def body(_, carry):
+        z, st = carry
+        g = jax.grad(loss)(z)
+        p, st, _ = adamw_update(acfg, {"z": g}, st, {"z": z})
+        return p["z"], st
+
+    z, _ = jax.lax.fori_loop(0, steps, body, (z0, state))
+    return z * scale
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _panel_geo(x_new, x_base, panel, *, k: int):
+    """Landmark-geodesic estimates of new points through the panel (the
+    front half of :func:`repro.core.sparse.map_new_points_panel`) plus
+    each point's nearest base anchor.  Returns (geo_lm (b, m), idx0 (b,))."""
+    d2 = ops.pairwise_sq_dists(x_new, x_base, mode="ref")
+    nd, idx = jax.lax.top_k(-d2, k)
+    anchor_d = jnp.sqrt(jnp.maximum(-nd, 0.0))
+    cols = jnp.transpose(panel[:, idx], (1, 2, 0))      # (b, k, m)
+    geo_lm = jnp.min(anchor_d[:, :, None] + cols, axis=1)
+    return geo_lm, idx[:, 0]
+
+
+# ------------------------------------------------------------ interface ----
+
+
+class EmbeddingObjective:
+    """How a geodesic system becomes coordinates — one interface for the
+    fit (dense stage tail / panel embed), the serving map, and the
+    post-absorb re-embed.  Subclasses set ``name`` (the registry and
+    fingerprint key) and ``params`` (attribute names that are part of the
+    objective's identity — they enter checkpoint fingerprints via
+    :meth:`identity`)."""
+
+    name = "base"
+    #: attribute names folded into resume/update-log fingerprints
+    params: tuple = ()
+    #: extra artifacts ``embed_panel`` provides beyond the spectral set
+    panel_extras: tuple = ()
+
+    def identity(self) -> dict:
+        """JSON-safe identity: objective name + its ``params`` values."""
+        return {
+            "objective": self.name,
+            **{p: getattr(self, p) for p in self.params},
+        }
+
+    # --- (a) embed a fitted geodesic system ---
+
+    def dense_stages(self) -> list:
+        """Stage tail of the dense chain (after ``clamp``): consumes the
+        exported ``geodesics`` and provides ``embedding``."""
+        raise NotImplementedError
+
+    def lle_tail_stages(self) -> list:
+        """Stage tail of the LLE chain (after the shared kNN front)."""
+        raise ValueError(
+            f"objective {self.name!r} has no LLE tail (LLE's bottom-"
+            "eigenproblem has no geodesic target distances to fit); use "
+            "the spectral objective for LLE"
+        )
+
+    def embed_panel(self, backend, cfg, panel, lm_idx) -> dict:
+        """Embed the (m, n) landmark panel; returns the sparse-regime
+        artifact dict (embedding, landmark_embedding, lm_pinv, lm_mean2,
+        eigenvalues, iterations, + ``panel_extras``)."""
+        raise NotImplementedError
+
+    # --- (b) out-of-sample mapping ---
+
+    def map_new_points(self, backend, x_new, snap, *, k: int):
+        """Map arrivals against a dense serving snapshot (x / geodesics /
+        embedding / mean_sq)."""
+        raise NotImplementedError
+
+    def map_new_points_panel(self, x_new, snap, *, k: int):
+        """Map arrivals against a sparse serving snapshot (x / panel /
+        lm_idx / embedding / lm_pinv / lm_mean2)."""
+        raise NotImplementedError
+
+    # --- (c) re-embed after an absorb ---
+
+    def reembed_dense(self, backend, cfg, grown) -> dict:
+        """Re-embed the grown (n+g, n+g) geodesics; returns the artifact
+        delta to publish (at least ``embedding``)."""
+        raise NotImplementedError
+
+    def reembed_panel(self, backend, cfg, grown, lm_idx) -> dict:
+        """Re-embed the grown (m, n+g) panel; returns at least
+        ``embedding``/``lm_pinv``/``lm_mean2``."""
+        raise NotImplementedError
+
+
+# -------------------------------------------------------------- spectral ----
+
+
+class SpectralMDS(EmbeddingObjective):
+    """The paper's tail: double-center the squared geodesics, top-d
+    power-iteration eigenbasis, coordinates = sqrt(eigenvalue)-scaled
+    eigenvectors.  Every method delegates to the exact pre-refactor
+    backend primitives, so the output is bit-identical to the historical
+    hardcoded path (asserted in tier-1)."""
+
+    name = "spectral"
+
+    def dense_stages(self):
+        from repro.core.pipeline import CenterStage, EigenStage
+
+        return [CenterStage(), EigenStage()]
+
+    def lle_tail_stages(self):
+        from repro.core.pipeline import LLEEigenStage, LLEWeightsStage
+
+        return [LLEWeightsStage(), LLEEigenStage()]
+
+    def embed_panel(self, backend, cfg, panel, lm_idx):
+        out = backend.sparse_embed(cfg, panel, lm_idx)
+        return {
+            "embedding": out.embedding,
+            "landmark_embedding": out.landmark_embedding,
+            "lm_pinv": out.pinv,
+            "lm_mean2": out.mean2,
+            "eigenvalues": out.eigenvalues,
+            "iterations": out.iterations,
+        }
+
+    def map_new_points(self, backend, x_new, snap, *, k):
+        return backend.map_new_points(
+            x_new, snap["x"], snap["geodesics"], snap["embedding"],
+            k=k, mean_sq=snap["mean_sq"],
+        )
+
+    def map_new_points_panel(self, x_new, snap, *, k):
+        from repro.core.sparse import map_new_points_panel
+
+        y, _ = map_new_points_panel(
+            x_new, snap["x"], snap["panel"], snap["lm_pinv"],
+            snap["lm_mean2"], k=k,
+        )
+        return y
+
+    def reembed_dense(self, backend, cfg, grown):
+        from repro.core.postprocess import embedding_from_eig
+
+        gram = backend.center(cfg, grown)
+        eig = backend.eigen(cfg, gram)
+        return {
+            "embedding": embedding_from_eig(
+                eig.eigenvectors, eig.eigenvalues
+            )
+        }
+
+    def reembed_panel(self, backend, cfg, grown, lm_idx):
+        from repro.core.sparse import landmark_mds_general
+
+        out = landmark_mds_general(
+            grown, lm_idx, d=cfg.d, max_iter=cfg.max_iter, tol=cfg.tol
+        )
+        return {
+            "embedding": out.embedding,
+            "lm_pinv": out.pinv,
+            "lm_mean2": out.mean2,
+        }
+
+
+# ---------------------------------------------------------------- stress ----
+
+
+class StressStage:
+    """Dense stress tail: refines the spectral embedding against the
+    exported geodesics.  Appended after ``eigen`` by
+    :meth:`StressMDS.dense_stages` — the spectral init comes free from
+    the stage it follows, and re-providing ``embedding`` overwrites the
+    export the mappers serve from."""
+
+    name = "stress"
+    requires = ("geodesics", "embedding")
+    provides = ("embedding", "stress", "stress_init")
+    exports = ("embedding", "stress", "stress_init")
+    params = ("objective_id",)
+
+    def __init__(self, objective):
+        self.objective = objective
+        self.objective_id = objective.identity()
+
+    def run(self, ctx, art):
+        # replicated compute, same policy as the dense landmark tail:
+        # the optimization state is O(n d), the loss matrix O(r n)
+        t = ctx.backend.place_replicated(art["geodesics"])
+        y0 = ctx.backend.place_replicated(art["embedding"])
+        y, s, s0 = stress_minimize(
+            t, jnp.arange(t.shape[0]), y0,
+            steps=self.objective.steps, lr=self.objective.lr,
+        )
+        return {"embedding": y, "stress": s, "stress_init": s0}
+
+
+class StressMDS(EmbeddingObjective):
+    """Sammon/Kruskal stress MDS on top of the spectral init.
+
+    Fit: run the spectral tail, then minimize Sammon-weighted stress of
+    the coordinates against the geodesic targets — the (n, n) matrix in
+    the dense regime, the (m, n) landmark panel (distances from the m
+    landmark rows to all n points) in the sparse regime — with the
+    in-repo AdamW (no warmup, cosine decay over ``steps``).  Serving maps
+    a new point by estimating its geodesics through the anchor
+    relaxation, then stress-placing it against the *fixed* base frame,
+    initialized at its nearest anchor's coordinates.  Absorb re-embeds
+    spectrally and re-refines."""
+
+    name = "stress"
+    params = ("steps", "lr", "oos_steps")
+    panel_extras = ("stress", "stress_init")
+
+    def __init__(
+        self, steps: int = 200, lr: float = 0.05, oos_steps: int = 80
+    ):
+        self.steps = int(steps)
+        self.lr = float(lr)
+        self.oos_steps = int(oos_steps)
+        self._spectral = SpectralMDS()
+
+    def dense_stages(self):
+        from repro.core.pipeline import CenterStage, EigenStage
+
+        return [CenterStage(), EigenStage(), StressStage(self)]
+
+    def embed_panel(self, backend, cfg, panel, lm_idx):
+        out = self._spectral.embed_panel(backend, cfg, panel, lm_idx)
+        y, s, s0 = stress_minimize(
+            backend.place_replicated(panel),
+            backend.place_replicated(lm_idx),
+            backend.place_replicated(out["embedding"]),
+            steps=self.steps, lr=self.lr,
+        )
+        out.update(embedding=y, stress=s, stress_init=s0)
+        return out
+
+    def map_new_points(self, backend, x_new, snap, *, k):
+        geo = backend.new_point_geodesics(
+            x_new, snap["x"], snap["geodesics"], k=k
+        )                                                 # (b, n)
+        y_base = snap["embedding"]
+        y0 = y_base[jnp.argmin(geo, axis=1)]
+        return stress_place(
+            geo, y_base, y0, steps=self.oos_steps, lr=self.lr
+        )
+
+    def map_new_points_panel(self, x_new, snap, *, k):
+        geo_lm, idx0 = _panel_geo(
+            x_new, snap["x"], snap["panel"],
+            k=min(k, snap["x"].shape[0]),
+        )
+        emb = snap["embedding"]
+        return stress_place(
+            geo_lm, emb[snap["lm_idx"]], emb[idx0],
+            steps=self.oos_steps, lr=self.lr,
+        )
+
+    def reembed_dense(self, backend, cfg, grown):
+        out = self._spectral.reembed_dense(backend, cfg, grown)
+        t = backend.place_replicated(grown)
+        y, _, _ = stress_minimize(
+            t, jnp.arange(t.shape[0]),
+            backend.place_replicated(out["embedding"]),
+            steps=self.steps, lr=self.lr,
+        )
+        return {"embedding": y}
+
+    def reembed_panel(self, backend, cfg, grown, lm_idx):
+        out = self._spectral.reembed_panel(backend, cfg, grown, lm_idx)
+        y, _, _ = stress_minimize(
+            grown, lm_idx, out["embedding"], steps=self.steps, lr=self.lr
+        )
+        out["embedding"] = y
+        return out
+
+
+# ------------------------------------------------------------ path-based ----
+
+
+class PathEmbedStage:
+    """Dense path-based tail: replaces center+eigen entirely — the
+    embedding is a landmark MDS whose landmarks are the points lying on
+    reference shortest paths recovered from the exported geodesics."""
+
+    name = "path_embed"
+    requires = ("geodesics",)
+    provides = ("embedding", "path_idx")
+    exports = ("embedding", "path_idx")
+    params = ("objective_id",)
+
+    def __init__(self, objective):
+        self.objective = objective
+        self.objective_id = objective.identity()
+
+    def run(self, ctx, art):
+        idx, out = self.objective._fit_dense(
+            ctx.backend, art["geodesics"], d=ctx.cfg.d
+        )
+        return {
+            "embedding": out.embedding,
+            "path_idx": ctx.backend.place_replicated(
+                jnp.asarray(idx, jnp.int32)
+            ),
+        }
+
+
+class PathIsomap(EmbeddingObjective):
+    """Najafi-style path-based isometric mapping.
+
+    The shortest-path structure comes straight from the already-computed
+    geodesics: endpoints are farthest-point-sampled in geodesic distance
+    (2 per reference path), and a point j lies on the a-b reference path
+    iff d(a,j) + d(j,b) <= d(a,b)(1 + slack) — a membership test that
+    needs only the endpoints' geodesic rows, never a new graph search.
+    The union of on-path points becomes the landmark set of a landmark
+    MDS (:func:`repro.core.sparse.landmark_mds_general`), so the
+    embedding preserves distances to the manifold-spanning reference
+    paths.  In the sparse regime the same selection runs over the
+    (m, m) landmark block and subselects panel rows.
+
+    Serving and re-embeds re-derive the path operators deterministically
+    from the snapshot's geodesic system (cached per serving version), so
+    out-of-sample triangulation lives in exactly the fit's frame.  The
+    eigen solve uses objective-owned ``max_iter``/``tol`` for that
+    reason: fit-time and serve-time derivations must agree even when the
+    serving process never sees the fit's PipelineConfig."""
+
+    name = "path"
+    params = ("n_paths", "slack", "max_points")
+    panel_extras = ("path_idx",)
+
+    #: eigen-solve knobs (objective identity is the *path* params; these
+    #: match the PipelineConfig defaults and stay fixed so fit-time and
+    #: serve-time operator derivations are bit-identical)
+    max_iter = 100
+    tol = 1e-9
+
+    def __init__(
+        self, n_paths: int = 4, slack: float = 1e-4, max_points: int = 0
+    ):
+        self.n_paths = int(n_paths)
+        self.slack = float(slack)
+        self.max_points = int(max_points)   # 0 = 4 sqrt(n) auto budget
+        self._spectral = SpectralMDS()
+        self._ops_cache: dict = {}          # id(system) -> derived operators
+
+    # --- path selection (host-side, deterministic) ---
+
+    def _select(self, row, n: int, d: int) -> np.ndarray:
+        """Select on-path point indices from a geodesic system exposed as
+        ``row(i) -> (n,)``.  Farthest-point endpoints (seeded from row 0,
+        so selection is deterministic and backend-independent), pairwise
+        path membership by the triangle-equality test, then cap/top-up to
+        the budget."""
+        cap = self.max_points or max(32, 4 * math.isqrt(n))
+        cap = min(cap, n)
+        lo = min(n, max(16, d + 2))
+
+        r0 = np.asarray(row(0))
+        e0 = int(np.argmax(np.where(np.isfinite(r0), r0, -np.inf)))
+        ends = [e0]
+        rows = {e0: np.asarray(row(e0))}
+        mind = rows[e0].copy()
+        while len(ends) < 2 * self.n_paths:
+            cand = np.where(np.isfinite(mind), mind, -np.inf)
+            nxt = int(np.argmax(cand))
+            if nxt in rows:
+                break
+            rows[nxt] = np.asarray(row(nxt))
+            ends.append(nxt)
+            mind = np.minimum(mind, rows[nxt])
+        members = set(ends)
+        for i in range(0, len(ends) - 1, 2):
+            a, b = ends[i], ends[i + 1]
+            ra, rb = rows[a], rows[b]
+            dab = ra[b]
+            if not np.isfinite(dab):
+                continue
+            on = np.nonzero(ra + rb <= dab * (1.0 + self.slack) + 1e-6)[0]
+            members.update(int(j) for j in on)
+        # top up a too-thin selection by continuing the FPS sweep (well
+        # spread, still deterministic); cap an over-generous one by even
+        # subsampling along the sorted index order
+        while len(members) < lo:
+            cand = np.where(np.isfinite(mind), mind, -np.inf)
+            nxt = int(np.argmax(cand))
+            if nxt in rows or cand[nxt] <= 0:
+                break                      # FPS exhausted (duplicates)
+            rows[nxt] = np.asarray(row(nxt))
+            members.add(nxt)
+            mind = np.minimum(mind, rows[nxt])
+        for j in range(n):
+            if len(members) >= lo:
+                break
+            members.add(j)
+        idx = np.sort(np.fromiter(members, dtype=np.int64))
+        if idx.shape[0] > cap:
+            keep = np.round(
+                np.linspace(0, idx.shape[0] - 1, cap)
+            ).astype(np.int64)
+            idx = idx[np.unique(keep)]
+        return idx
+
+    # --- fits ---
+
+    def _fit_dense(self, backend, a, *, d: int):
+        """Path selection + landmark MDS over the dense geodesics; only
+        the endpoints' rows ever leave the device/mesh for selection."""
+        from repro.core.sparse import landmark_mds_general
+
+        n = a.shape[0]
+        idx = self._select(
+            lambda i: np.asarray(
+                backend.gather_rows(a, jnp.asarray([i], jnp.int32))
+            )[0],
+            n, d,
+        )
+        rows = backend.gather_rows(a, jnp.asarray(idx, jnp.int32))
+        out = landmark_mds_general(
+            rows, jnp.asarray(idx, jnp.int32),
+            d=d, max_iter=self.max_iter, tol=self.tol,
+        )
+        return idx, out
+
+    def _fit_panel(self, panel, lm_np: np.ndarray, *, d: int):
+        """Path selection over the (m, m) landmark block, landmark MDS on
+        the selected panel rows.  Returns (row positions, PanelEmbedding)."""
+        from repro.core.sparse import landmark_mds_general
+
+        sub = np.asarray(panel)[:, lm_np]               # (m, m) host block
+        pos = self._select(lambda i: sub[i], lm_np.shape[0], d)
+        rows = jnp.asarray(panel)[jnp.asarray(pos, jnp.int32)]
+        out = landmark_mds_general(
+            rows, jnp.asarray(lm_np[pos], jnp.int32),
+            d=d, max_iter=self.max_iter, tol=self.tol,
+        )
+        return pos, out
+
+    # --- cached serving operators ---
+
+    def _cached(self, key, derive):
+        hit = self._ops_cache.get(key)
+        if hit is None:
+            hit = derive()
+            self._ops_cache[key] = hit
+            while len(self._ops_cache) > 4:   # old serving versions
+                self._ops_cache.pop(next(iter(self._ops_cache)))
+        return hit
+
+    # --- interface ---
+
+    def dense_stages(self):
+        return [PathEmbedStage(self)]
+
+    def embed_panel(self, backend, cfg, panel, lm_idx):
+        # full-panel spectral operators keep the sparse serving contract
+        # (lm_pinv/lm_mean2 sized (m, ·)); the embedding itself is the
+        # path fit's
+        out = self._spectral.embed_panel(backend, cfg, panel, lm_idx)
+        panel_rep = backend.place_replicated(panel)
+        lm_np = np.asarray(lm_idx)
+        pos, pout = self._fit_panel(panel_rep, lm_np, d=cfg.d)
+        out["embedding"] = pout.embedding
+        out["path_idx"] = backend.place_replicated(
+            jnp.asarray(lm_np[pos], jnp.int32)
+        )
+        return out
+
+    def map_new_points(self, backend, x_new, snap, *, k):
+        from repro.core.sparse import map_new_points_panel
+
+        a = snap["geodesics"]
+        d = snap["embedding"].shape[1]
+        idx, out = self._cached(
+            ("dense", id(a)), lambda: self._fit_dense(backend, a, d=d)
+        )
+        rows = backend.gather_rows(a, jnp.asarray(idx, jnp.int32))
+        y, _ = map_new_points_panel(
+            x_new, snap["x"], rows, out.pinv, out.mean2, k=k
+        )
+        return y
+
+    def map_new_points_panel(self, x_new, snap, *, k):
+        from repro.core.sparse import map_new_points_panel
+
+        panel = snap["panel"]
+        d = snap["embedding"].shape[1]
+        pos, out = self._cached(
+            ("panel", id(panel)),
+            lambda: self._fit_panel(panel, np.asarray(snap["lm_idx"]), d=d),
+        )
+        rows = jnp.asarray(panel)[jnp.asarray(pos, jnp.int32)]
+        y, _ = map_new_points_panel(
+            x_new, snap["x"], rows, out.pinv, out.mean2, k=k
+        )
+        return y
+
+    def reembed_dense(self, backend, cfg, grown):
+        _, out = self._fit_dense(backend, grown, d=cfg.d)
+        return {"embedding": out.embedding}
+
+    def reembed_panel(self, backend, cfg, grown, lm_idx):
+        out = self._spectral.reembed_panel(backend, cfg, grown, lm_idx)
+        _, pout = self._fit_panel(grown, np.asarray(lm_idx), d=cfg.d)
+        out["embedding"] = pout.embedding
+        return out
+
+
+# -------------------------------------------------------------- registry ----
+
+
+OBJECTIVES = {
+    "spectral": SpectralMDS,
+    "stress": StressMDS,
+    "path": PathIsomap,
+}
+
+
+def get_objective(spec=None) -> EmbeddingObjective:
+    """Resolve an objective: None -> SpectralMDS (the historical
+    behaviour), a name -> registry lookup, an instance -> itself."""
+    if spec is None:
+        return SpectralMDS()
+    if isinstance(spec, EmbeddingObjective):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return OBJECTIVES[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown embedding objective {spec!r} "
+                f"(known: {sorted(OBJECTIVES)})"
+            ) from None
+    raise TypeError(
+        f"objective must be None, a name, or an EmbeddingObjective "
+        f"instance: {spec!r}"
+    )

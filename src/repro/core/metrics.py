@@ -62,6 +62,15 @@ def stream_mapping_error(
     return resid / jnp.maximum(scale, 1e-12)
 
 
+def _one_minus_r2(d_geo: jax.Array, d_emb: jax.Array) -> jax.Array:
+    a = d_geo.reshape(-1)
+    b = d_emb.reshape(-1)
+    a = a - a.mean()
+    b = b - b.mean()
+    r = jnp.sum(a * b) / jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))
+    return 1.0 - r**2
+
+
 @jax.jit
 def residual_variance(d_geo: jax.Array, y: jax.Array) -> jax.Array:
     """1 - r^2 between geodesic distances and embedding distances
@@ -71,9 +80,21 @@ def residual_variance(d_geo: jax.Array, y: jax.Array) -> jax.Array:
             jnp.sum((y[:, None, :] - y[None, :, :]) ** 2, axis=-1), 0.0
         )
     )
-    a = d_geo.reshape(-1)
-    b = d_emb.reshape(-1)
-    a = a - a.mean()
-    b = b - b.mean()
-    r = jnp.sum(a * b) / jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))
-    return 1.0 - r**2
+    return _one_minus_r2(d_geo, d_emb)
+
+
+@jax.jit
+def residual_variance_panel(
+    panel: jax.Array, y: jax.Array, lm_idx: jax.Array
+) -> jax.Array:
+    """Residual variance in the sparse regime: correlates the (m, n)
+    landmark-geodesic panel against the embedded landmark-to-all
+    distances, so objectives stay comparable without ever materializing
+    the (n, n) geodesics."""
+    d_emb = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum((y[lm_idx][:, None, :] - y[None, :, :]) ** 2, axis=-1),
+            0.0,
+        )
+    )
+    return _one_minus_r2(panel, d_emb)

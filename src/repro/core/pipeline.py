@@ -115,6 +115,10 @@ class PipelineConfig:
     # it fits the REPRO_DENSE_BYTES budget, sparse beyond (see stages_for)
     regime: str = "auto"
     landmarks: int = 0     # sparse-regime landmark budget (0 = sqrt-rule)
+    # embedding objective: "spectral" (classical MDS eigensolve),
+    # "stress" (Sammon stress refined by AdamW), "path" (path-based
+    # landmark Isomap) - see repro.core.embedding.OBJECTIVES
+    objective: str = "spectral"
 
 
 # ------------------------------------------------------------ backends ----
@@ -213,6 +217,16 @@ class LocalBackend:
             x_new, x_base, geodesics, embedding, k=k, mean_sq=mean_sq
         )
 
+    def new_point_geodesics(self, x_new, x_base, geodesics, *, k: int):
+        """(b, n) geodesic rows for out-of-sample points (no embedding)."""
+        from repro.core.streaming import new_point_geodesics
+
+        return new_point_geodesics(x_new, x_base, geodesics, k=k)
+
+    def gather_rows(self, a, idx):
+        """Gather rows of a backend-placed matrix onto a dense array."""
+        return jnp.asarray(a)[jnp.asarray(idx)]
+
     # --- updatable-manifold tail ---
 
     def expand_geodesics(self, a, e, f, *, mode: str = "auto"):
@@ -276,6 +290,16 @@ class LocalBackend:
 
     def place(self, value, placement):
         return jnp.asarray(value)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_gather_rows(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.jit(
+        lambda a, i: jnp.take(a, i, axis=0),
+        out_shardings=NamedSharding(mesh, P()),
+    )
 
 
 class MeshBackend:
@@ -405,6 +429,21 @@ class MeshBackend:
             data_axis=self.data_axis, model_axis=self.model_axis,
             mean_sq=mean_sq,
         )
+
+    def new_point_geodesics(self, x_new, x_base, geodesics, *, k: int):
+        from repro.core.streaming import new_point_geodesics_sharded
+
+        return new_point_geodesics_sharded(
+            x_new, x_base, geodesics, self.mesh, k=k,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+        )
+
+    def gather_rows(self, a, idx):
+        """Gather rows of a tile-sharded matrix, replicated on out - the
+        handful of path/landmark rows an objective pulls is O(p * n),
+        nowhere near the sharded budget."""
+        fn = _make_gather_rows(self.mesh)
+        return fn(jnp.asarray(a), jnp.asarray(idx))
 
     # --- updatable-manifold tail ---
 
@@ -776,17 +815,22 @@ class LLEEigenStage:
         return {"embedding": lle_bottom_eigen(art["lle_m"], d=ctx.cfg.d)}
 
 
-def isomap_stages() -> list[Stage]:
-    """The Alg. 1 chain."""
+def isomap_stages(objective=None) -> list[Stage]:
+    """The Alg. 1 chain; the embedding tail comes from the objective
+    (default SpectralMDS, i.e. the historical center+eigen stages)."""
+    from repro.core.embedding import get_objective
+
     return [
-        KNNStage(), GraphStage(), APSPStage(),
-        ClampStage(), CenterStage(), EigenStage(),
+        KNNStage(), GraphStage(), APSPStage(), ClampStage(),
+        *get_objective(objective).dense_stages(),
     ]
 
 
-def lle_stages() -> list[Stage]:
-    """LLE = shared kNN front + LLE-specific tail."""
-    return [KNNStage(), LLEWeightsStage(), LLEEigenStage()]
+def lle_stages(objective=None) -> list[Stage]:
+    """LLE = shared kNN front + objective-declared LLE tail."""
+    from repro.core.embedding import get_objective
+
+    return [KNNStage(), *get_objective(objective).lle_tail_stages()]
 
 
 def stages_for(cfg: PipelineConfig, n: int) -> list[Stage]:
@@ -797,18 +841,25 @@ def stages_for(cfg: PipelineConfig, n: int) -> list[Stage]:
     landmark-panel chain, "auto" picks dense exactly while its three
     (n, n) arrays fit ``REPRO_DENSE_BYTES`` and sparse beyond — so small
     fits keep bit-exact geodesics and big fits keep O(n k + m n)
-    residency, with no flag day in between."""
+    residency, with no flag day in between.  ``cfg.objective`` selects
+    the embedding tail in either regime."""
     from repro.core import sparse as sparse_mod
+    from repro.core.embedding import get_objective
 
+    objective = get_objective(getattr(cfg, "objective", None))
     regime = getattr(cfg, "regime", "auto")
     if regime == "dense":
-        return isomap_stages()
+        return isomap_stages(objective)
     if regime == "sparse":
-        return sparse_mod.sparse_isomap_stages(cfg.landmarks or None)
+        return sparse_mod.sparse_isomap_stages(
+            cfg.landmarks or None, objective
+        )
     if regime == "auto":
         if sparse_mod.dense_budget_ok(n):
-            return isomap_stages()
-        return sparse_mod.sparse_isomap_stages(cfg.landmarks or None)
+            return isomap_stages(objective)
+        return sparse_mod.sparse_isomap_stages(
+            cfg.landmarks or None, objective
+        )
     raise ValueError(
         f"unknown regime {regime!r} (expected dense/sparse/auto)"
     )

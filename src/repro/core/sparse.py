@@ -452,36 +452,50 @@ class SparseGeodesicStage:
 
 
 class SparseEmbedStage:
-    """Landmark MDS + triangulation of the panel (general lm indices)."""
+    """Embed the landmark panel through the configured objective.
+
+    The spectral artifact set (lm_pinv/lm_mean2 and friends) is always
+    produced - it is the serving contract of
+    :class:`~repro.core.streaming.LandmarkStreamingMapper` - and
+    non-spectral objectives append their extras (stress values, path
+    landmark sets) on top, declared via ``panel_extras`` so liveness
+    pruning and checkpoints see them.
+    """
 
     name = "sparse_embed"
-    requires = ("panel", "lm_idx")
-    provides = (
+    params = ("objective_id",)
+
+    _BASE_PROVIDES = (
         "embedding", "landmark_embedding", "lm_pinv", "lm_mean2",
         "eigenvalues", "iterations",
     )
-    exports = (
+    _BASE_EXPORTS = (
         "embedding", "lm_pinv", "lm_mean2", "eigenvalues", "iterations",
     )
 
+    def __init__(self, objective=None):
+        from repro.core.embedding import get_objective
+
+        self.objective = get_objective(objective)
+        extras = tuple(self.objective.panel_extras)
+        self.provides = self._BASE_PROVIDES + extras
+        self.exports = self._BASE_EXPORTS + extras
+        self.objective_id = self.objective.identity()
+
+    requires = ("panel", "lm_idx")
+
     def run(self, ctx, art):
-        out = ctx.backend.sparse_embed(ctx.cfg, art["panel"], art["lm_idx"])
-        return {
-            "embedding": out.embedding,
-            "landmark_embedding": out.landmark_embedding,
-            "lm_pinv": out.pinv,
-            "lm_mean2": out.mean2,
-            "eigenvalues": out.eigenvalues,
-            "iterations": out.iterations,
-        }
+        return self.objective.embed_panel(
+            ctx.backend, ctx.cfg, art["panel"], art["lm_idx"]
+        )
 
 
-def sparse_isomap_stages(m: int | None = None):
+def sparse_isomap_stages(m: int | None = None, objective=None):
     """The sparse-regime chain: shared kNN front, CSR assembly, landmark
     selection, segmented frontier geodesics, panel embedding."""
     from repro.core.pipeline import KNNStage
 
     return [
         KNNStage(), CSRGraphStage(), LandmarkSelectStage(m),
-        SparseGeodesicStage(), SparseEmbedStage(),
+        SparseGeodesicStage(), SparseEmbedStage(objective),
     ]

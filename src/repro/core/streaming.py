@@ -97,6 +97,22 @@ def map_new_points(
     return y_new
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def new_point_geodesics(
+    x_new: jax.Array, x_base: jax.Array, a_base: jax.Array, *, k: int = 10
+):
+    """The geodesic-estimate front half of :func:`map_new_points` on its
+    own: (m, n) estimated geodesics from each arrival to every base point
+    via the k-anchor min-plus relaxation.  Non-spectral embedding
+    objectives consume these directly (stress placement fits coordinates
+    to them instead of triangulating through the eigenbasis)."""
+    k = min(k, x_base.shape[0])
+    d2 = ops.pairwise_sq_dists(x_new, x_base)            # (m, n)
+    neg, idx = jax.lax.top_k(-d2, k)
+    anchor_d = jnp.sqrt(jnp.maximum(-neg, 0.0))          # (m, k)
+    return jnp.min(anchor_d[:, :, None] + a_base[idx], axis=1)
+
+
 # ------------------------------------------------------------- sharded ----
 
 
@@ -123,6 +139,79 @@ def _make_row_mean_sq_sharded(mesh, n, data_axis, model_axis):
     return jax.jit(fn)
 
 
+def _geo_shard_body(x_new, xb_loc, a_loc, k, nr, data_axis, model_axis, mode):
+    """Per-device body of the sharded geodesic estimate, shared by the
+    triangulating mapper and the raw :func:`new_point_geodesics` hook."""
+    from repro.sharding.logical import folded_axis_index
+
+    di = folded_axis_index(data_axis)
+    # kNN anchors against the row-sharded base set: per-shard distance
+    # chunks, gathered so every device ranks the same full row
+    d2_loc = ops.pairwise_sq_dists(x_new, xb_loc, mode=mode)  # (m, nr)
+    d2 = jax.lax.all_gather(d2_loc, data_axis, axis=1, tiled=True)
+    neg, idx = jax.lax.top_k(-d2, k)                 # (m, k) global ids
+    anchor_d = jnp.sqrt(jnp.maximum(-neg, 0.0))      # (m, k)
+    # complete the k anchor rows of the tile-sharded geodesics: each
+    # device contributes the rows it owns, a masked psum fills the rest
+    owner = idx // nr                                # (m, k)
+    local = jnp.clip(idx - di * nr, 0, nr - 1)
+    rows = jnp.where(
+        (owner == di)[:, :, None], a_loc[local], 0.0
+    )                                                # (m, k, nc)
+    rows = jax.lax.psum(rows, data_axis)
+    # anchor relaxation on this device's column chunk of the geodesics
+    geo_loc = jnp.min(anchor_d[:, :, None] + rows, axis=1)   # (m, nc)
+    return jax.lax.all_gather(geo_loc, model_axis, axis=1, tiled=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_new_point_geo_sharded(mesh, n, k, data_axis, model_axis, mode):
+    """Sharded :func:`new_point_geodesics`: same per-device relaxation as
+    the mapper, without the triangulation tail (replicated (m, n) out)."""
+    from repro.sharding.logical import mesh_axis_size
+
+    pd = mesh_axis_size(mesh, data_axis)
+    pm = mesh_axis_size(mesh, model_axis)
+    if n % pd or n % pm:
+        raise ValueError(
+            f"base-set size {n} must divide the mesh axes ({pd}, {pm})"
+        )
+    nr = n // pd
+
+    def shard_fn(x_new, xb_loc, a_loc):
+        return _geo_shard_body(
+            x_new, xb_loc, a_loc, k, nr, data_axis, model_axis, mode
+        )
+
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(data_axis), P(data_axis, model_axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def new_point_geodesics_sharded(
+    x_new: jax.Array,
+    x_base: jax.Array,
+    a_base: jax.Array,
+    mesh,
+    *,
+    k: int = 10,
+    data_axis: str = "data",
+    model_axis: str = "model",
+    mode: str = "auto",
+):
+    """Mesh-sharded :func:`new_point_geodesics` (same sharding contract
+    as :func:`map_new_points_sharded`)."""
+    n = x_base.shape[0]
+    fn = _make_new_point_geo_sharded(
+        mesh, n, min(k, n), data_axis, model_axis, mode
+    )
+    return fn(x_new, x_base, a_base)
+
+
 @functools.lru_cache(maxsize=None)
 def _make_map_new_points_sharded(
     mesh, n, k, data_axis, model_axis, mode
@@ -131,7 +220,7 @@ def _make_map_new_points_sharded(
 
     Cached per (mesh, n, k) so repeated serving calls reuse one compiled
     executable per arrival-batch shape."""
-    from repro.sharding.logical import folded_axis_index, mesh_axis_size
+    from repro.sharding.logical import mesh_axis_size
 
     pd = mesh_axis_size(mesh, data_axis)
     pm = mesh_axis_size(mesh, model_axis)
@@ -142,24 +231,9 @@ def _make_map_new_points_sharded(
     nr = n // pd
 
     def shard_fn(x_new, xb_loc, a_loc, y_base, mean_sq):
-        di = folded_axis_index(data_axis)
-        # kNN anchors against the row-sharded base set: per-shard distance
-        # chunks, gathered so every device ranks the same full row
-        d2_loc = ops.pairwise_sq_dists(x_new, xb_loc, mode=mode)  # (m, nr)
-        d2 = jax.lax.all_gather(d2_loc, data_axis, axis=1, tiled=True)
-        neg, idx = jax.lax.top_k(-d2, k)                 # (m, k) global ids
-        anchor_d = jnp.sqrt(jnp.maximum(-neg, 0.0))      # (m, k)
-        # complete the k anchor rows of the tile-sharded geodesics: each
-        # device contributes the rows it owns, a masked psum fills the rest
-        owner = idx // nr                                # (m, k)
-        local = jnp.clip(idx - di * nr, 0, nr - 1)
-        rows = jnp.where(
-            (owner == di)[:, :, None], a_loc[local], 0.0
-        )                                                # (m, k, nc)
-        rows = jax.lax.psum(rows, data_axis)
-        # anchor relaxation on this device's column chunk of the geodesics
-        geo_loc = jnp.min(anchor_d[:, :, None] + rows, axis=1)   # (m, nc)
-        geo = jax.lax.all_gather(geo_loc, model_axis, axis=1, tiled=True)
+        geo = _geo_shard_body(
+            x_new, xb_loc, a_loc, k, nr, data_axis, model_axis, mode
+        )
         # replicated triangulation against the precomputed row statistics
         pinv = _eigenbasis_pinv(y_base)
         return -0.5 * (jnp.square(geo) - mean_sq[None, :]) @ pinv
@@ -247,7 +321,10 @@ class StreamingMapper:
         batch: int = 256,
         backend=None,
         update=None,
+        objective=None,
     ):
+        from repro.core.embedding import get_objective
+
         n = x_base.shape[0]
         assert geodesics.shape == (n, n), (geodesics.shape, n)
         assert embedding.shape[0] == n, (embedding.shape, n)
@@ -258,6 +335,7 @@ class StreamingMapper:
         self.backend = backend
         self.k = min(k, n)
         self.batch = batch
+        self.objective = get_objective(objective)
         if getattr(backend, "kind", "local") == "sharded":
             from jax.sharding import NamedSharding
 
@@ -337,7 +415,7 @@ class StreamingMapper:
     @classmethod
     def from_artifacts(
         cls, artifacts, *, k: int = 10, batch: int = 256, backend=None,
-        update=None,
+        update=None, objective=None,
     ):
         """Build from a ManifoldPipeline.run() result (an ArtifactStore
         Mapping, or any plain dict with the same keys).
@@ -362,12 +440,13 @@ class StreamingMapper:
         return cls(
             *(artifacts[a] for a in cls.SERVING_ARTIFACTS),
             k=k, batch=batch, backend=backend, update=update,
+            objective=objective,
         )
 
     @classmethod
     def from_checkpoint(
         cls, manager, *, k: int = 10, batch: int = 256, backend=None,
-        update=None, replay_updates: bool = True,
+        update=None, replay_updates: bool = True, objective=None,
     ):
         """Restore the newest pipeline checkpoint holding the needed
         artifacts (i.e. any stage boundary at or after ``eigen``), then
@@ -377,13 +456,33 @@ class StreamingMapper:
         Tolerant scan (same contract as the pipeline's resume scan): a
         concurrently GC'd or partially written step - manifest unreadable,
         or missing the ``keys`` field - is skipped, falling back to the
-        next-older boundary instead of crashing the serving process."""
+        next-older boundary instead of crashing the serving process.
+
+        Objective identity (same discipline as the pipeline's resume
+        fingerprints): a checkpoint fitted under one embedding objective
+        must not be served as another - the spectral eigenbasis is not a
+        stress answer - so a recorded ``config.objective`` that differs
+        from the requested one raises instead of silently serving."""
+        from repro.core.embedding import get_objective
+
+        obj = get_objective(objective)
         for step in reversed(manager.all_steps()):
             try:
                 manifest = manager.read_manifest(step)
             except OSError:
                 continue
             if set(cls.SERVING_ARTIFACTS) <= set(manifest.get("keys", [])):
+                saved_obj = (manifest.get("config") or {}).get(
+                    "objective", "spectral"
+                )
+                if saved_obj != obj.name:
+                    raise ValueError(
+                        f"checkpoint step {step} in {manager.directory} "
+                        f"was fitted under objective {saved_obj!r}; "
+                        f"serving it as {obj.name!r} would answer from "
+                        "the wrong embedding.  Restore with "
+                        f"objective={saved_obj!r} or refit"
+                    )
                 try:
                     art = manager.restore_flat(step)
                 except (OSError, KeyError):
@@ -392,6 +491,7 @@ class StreamingMapper:
                     continue
                 mapper = cls.from_artifacts(
                     art, k=k, batch=batch, backend=backend, update=update,
+                    objective=obj,
                 )
                 if replay_updates:
                     mapper.replay_update_log(manager.directory)
@@ -404,9 +504,8 @@ class StreamingMapper:
 
     def _map_batch(self, x_new: jax.Array, snap=None) -> jax.Array:
         snap = snap if snap is not None else self._versions.current
-        return self.backend.map_new_points(
-            x_new, snap["x"], snap["geodesics"], snap["embedding"],
-            k=self.k, mean_sq=snap["mean_sq"],
+        return self.objective.map_new_points(
+            self.backend, x_new, snap, k=self.k
         )
 
     def __call__(self, x_new: jax.Array) -> jax.Array:
@@ -492,6 +591,16 @@ class StreamingMapper:
                 "produce a different manifold.  Restore with matching "
                 "parameters or discard the update log"
             )
+        log_obj = manifest.get("objective")
+        if log_obj is not None and log_obj != self.objective.name:
+            raise ValueError(
+                f"update log under {checkpoint_dir!r} was absorbed "
+                f"under objective {log_obj!r}; this mapper serves "
+                f"{self.objective.name!r} - replaying it would re-embed "
+                "with a different objective than the log's published "
+                "versions.  Restore with the matching objective or "
+                "discard the update log"
+            )
         with self._absorb_lock:
             if self._updater is None:
                 import dataclasses
@@ -546,7 +655,9 @@ class LandmarkStreamingMapper(StreamingMapper):
         batch: int = 256,
         backend=None,
         update=None,
+        objective=None,
     ):
+        from repro.core.embedding import get_objective
         from repro.core.sparse import panel_row_mean_sq
 
         n = x_base.shape[0]
@@ -563,6 +674,7 @@ class LandmarkStreamingMapper(StreamingMapper):
         self.backend = backend
         self.k = min(k, n)
         self.batch = batch
+        self.objective = get_objective(objective)
         place = getattr(backend, "place_replicated", jnp.asarray)
         self._versions = VersionedArtifacts({
             "x": place(jnp.asarray(x_base)),
@@ -600,11 +712,5 @@ class LandmarkStreamingMapper(StreamingMapper):
         )
 
     def _map_batch(self, x_new: jax.Array, snap=None) -> jax.Array:
-        from repro.core.sparse import map_new_points_panel
-
         snap = snap if snap is not None else self._versions.current
-        y, _ = map_new_points_panel(
-            x_new, snap["x"], snap["panel"], snap["lm_pinv"],
-            snap["lm_mean2"], k=self.k,
-        )
-        return y
+        return self.objective.map_new_points_panel(x_new, snap, k=self.k)

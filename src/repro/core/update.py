@@ -452,10 +452,9 @@ class GeodesicUpdater:
         return group_sz
 
     def _expand(self, group: np.ndarray):
-        """One flush: grow the geodesic system by `group` and republish
-        x/geodesics/embedding/mean_sq atomically."""
+        """One flush: grow the geodesic system by `group`, re-embed it
+        under the mapper's objective, and republish atomically."""
         from repro.core.pipeline import PipelineConfig
-        from repro.core.postprocess import embedding_from_eig
 
         mapper = self.mapper
         backend = mapper.backend
@@ -477,15 +476,14 @@ class GeodesicUpdater:
         cfg = PipelineConfig(
             k=mapper.k, d=snap["embedding"].shape[1],
             max_iter=self.cfg.max_iter, tol=self.cfg.tol,
+            objective=mapper.objective.name,
         )
-        gram = backend.center(cfg, grown)
-        eig = backend.eigen(cfg, gram)
-        y = embedding_from_eig(eig.eigenvectors, eig.eigenvalues)
+        out = mapper.objective.reembed_dense(backend, cfg, grown)
         mapper._publish(
             x=x_grown,
             geodesics=grown,
-            embedding=y,
             mean_sq=backend.row_mean_sq(grown),
+            **out,
         )
 
     # ---------------------------------------------------------- durability --
@@ -524,6 +522,7 @@ class GeodesicUpdater:
                 "n_base0": self._n_base0,
                 "threshold": self.cfg.threshold,
                 "multiple": self.multiple,
+                "objective": self.mapper.objective.name,
             },
         )
 
@@ -614,9 +613,8 @@ class LandmarkGeodesicUpdater(GeodesicUpdater):
     """
 
     def _expand(self, group: np.ndarray):
-        from repro.core.sparse import (
-            landmark_mds_general, panel_row_mean_sq,
-        )
+        from repro.core.pipeline import PipelineConfig
+        from repro.core.sparse import panel_row_mean_sq
 
         mapper = self.mapper
         backend = mapper.backend
@@ -628,17 +626,18 @@ class LandmarkGeodesicUpdater(GeodesicUpdater):
             jnp.asarray(group), jnp.asarray(xb), k=mapper.k
         )
         grown = expand_panel(jnp.asarray(np.asarray(snap["panel"])), e, f)
-        out = landmark_mds_general(
-            grown, jnp.asarray(np.asarray(snap["lm_idx"])),
-            d=snap["embedding"].shape[1],
+        cfg = PipelineConfig(
+            k=mapper.k, d=snap["embedding"].shape[1],
             max_iter=self.cfg.max_iter, tol=self.cfg.tol,
+            objective=mapper.objective.name,
+        )
+        out = mapper.objective.reembed_panel(
+            backend, cfg, grown, jnp.asarray(np.asarray(snap["lm_idx"]))
         )
         place = getattr(backend, "place_replicated", jnp.asarray)
         mapper._publish(
             x=place(jnp.asarray(np.concatenate([xb, group], axis=0))),
             panel=place(grown),
-            embedding=place(out.embedding),
-            lm_pinv=place(out.pinv),
-            lm_mean2=place(out.mean2),
             mean_sq=place(panel_row_mean_sq(grown)),
+            **{key: place(v) for key, v in out.items()},
         )

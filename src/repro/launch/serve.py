@@ -118,6 +118,7 @@ def serve_manifold(
     mesh_shape: tuple[int, int] | None = None,
     regime: str = "auto",
     landmarks: int = 0,
+    objective: str = "spectral",
     seed: int = 0,
 ):
     """Fit the staged Isomap pipeline on a base batch, then serve streamed
@@ -194,7 +195,8 @@ def serve_manifold(
         checkpoint = CheckpointManager(checkpoint_dir)
 
     pcfg = PipelineConfig(
-        k=k, d=d, block=block, regime=regime, landmarks=landmarks
+        k=k, d=d, block=block, regime=regime, landmarks=landmarks,
+        objective=objective,
     )
     stages = stages_for(pcfg, n_base)
     sparse_fit = any(s.name == "sparse_geodesics" for s in stages)
@@ -220,7 +222,8 @@ def serve_manifold(
         )
     mapper_cls = LandmarkStreamingMapper if sparse_fit else StreamingMapper
     mapper = mapper_cls.from_artifacts(
-        art, k=k, batch=stream_batch, backend=backend, update=update_cfg
+        art, k=k, batch=stream_batch, backend=backend, update=update_cfg,
+        objective=objective,
     )
     if resume and checkpoint_dir:
         # a restarted server replays absorbed arrivals, not just the fit
@@ -256,6 +259,18 @@ def serve_manifold(
     err = float(
         metrics.procrustes_error(jnp.asarray(full), jnp.asarray(latent))
     )
+    # residual variance (Tenenbaum's 1 - r^2) of the served base frame:
+    # geodesic-vs-embedded distance agreement, comparable across
+    # objectives (procrustes needs the latent oracle; this does not)
+    snap = mapper.snapshot()
+    if sparse_fit:
+        rv = float(metrics.residual_variance_panel(
+            snap["panel"], snap["embedding"], snap["lm_idx"]
+        ))
+    else:
+        rv = float(metrics.residual_variance(
+            snap["geodesics"], snap["embedding"]
+        ))
     return {
         "fit_s": t_fit,
         "serve_s": t_serve,
@@ -265,11 +280,13 @@ def serve_manifold(
         "mean_batch": stats["mean_batch"],
         "requests": stats["requests"],
         "procrustes_error": err,
+        "residual_variance": rv,
         "n_base": n_base,
         "n_stream": n_stream,
         "absorbed": n_absorbed,
         "serving_version": mapper.version,
         "regime": "sparse" if sparse_fit else "dense",
+        "objective": objective,
     }
 
 
@@ -344,6 +361,14 @@ def build_parser() -> argparse.ArgumentParser:
         "--landmarks", type=int, default=0,
         help="sparse-regime landmark budget m (0: ~4 sqrt(n) default)",
     )
+    ap.add_argument(
+        "--objective", choices=("spectral", "stress", "path"),
+        default="spectral",
+        help="embedding objective: spectral = classical-MDS eigensolve "
+        "(the paper's tail), stress = Sammon stress refined by AdamW on "
+        "the spectral init, path = path-based landmark Isomap over "
+        "reference shortest paths (repro.core.embedding)",
+    )
     return ap
 
 
@@ -374,9 +399,11 @@ def main():
             mesh_shape=mesh_shape,
             regime=args.regime,
             landmarks=args.landmarks,
+            objective=args.objective,
         )
         print(
             f"[serve manifold] regime={out['regime']} "
+            f"objective={out['objective']} "
             f"fit={out['fit_s']:.2f}s "
             f"serve={out['serve_s']:.3f}s "
             f"({out['points_per_s']:.0f} pts/s) "
@@ -384,7 +411,8 @@ def main():
             f"p99={out['latency_p99_ms']:.1f}ms "
             f"mean_batch={out['mean_batch']:.1f} "
             f"absorbed={out['absorbed']} v{out['serving_version']} "
-            f"err={out['procrustes_error']:.2e}"
+            f"err={out['procrustes_error']:.2e} "
+            f"rv={out['residual_variance']:.3f}"
         )
         return
     if not args.arch:

@@ -31,13 +31,19 @@ class AdamWConfig:
 
 
 def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
-    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
-    prog = jnp.clip(
-        (step - cfg.warmup_steps)
-        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
-        0.0,
-        1.0,
-    )
+    # warmup_steps == 0 means NO warmup ramp: full lr from step 0 (the
+    # naive step/max(w, 1) would make the step-0 lr exactly 0)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+    else:
+        warm = jnp.ones_like(jnp.asarray(step, jnp.float32))
+    decay_steps = cfg.total_steps - cfg.warmup_steps
+    if decay_steps > 0:
+        prog = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    else:
+        # total_steps == warmup_steps: there is no decay phase - hold at
+        # full lr instead of collapsing to min_lr_frac one step in
+        prog = jnp.zeros_like(jnp.asarray(step, jnp.float32))
     cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
     frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
     return cfg.lr * warm * frac

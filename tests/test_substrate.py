@@ -58,6 +58,31 @@ def test_cosine_schedule_shape():
     assert abs(end - 0.1) < 1e-6
 
 
+def test_cosine_schedule_no_warmup():
+    # warmup_steps=0 must mean "no ramp": full lr from step 0, not a
+    # division-by-zero or a forced-zero first step
+    cfg = AdamWConfig(lr=0.5, warmup_steps=0, total_steps=100, min_lr_frac=0.1)
+    first = float(cosine_schedule(cfg, jnp.asarray(0)))
+    assert abs(first - 0.5) < 1e-6
+    end = float(cosine_schedule(cfg, jnp.asarray(100)))
+    assert abs(end - 0.05) < 1e-6
+    assert np.isfinite(first) and np.isfinite(end)
+
+
+def test_cosine_schedule_all_warmup():
+    # total_steps == warmup_steps leaves no decay phase: the schedule
+    # must hold at full lr after warmup instead of collapsing to
+    # min_lr_frac (or emitting nan from 0/0 progress)
+    cfg = AdamWConfig(lr=1.0, warmup_steps=50, total_steps=50, min_lr_frac=0.1)
+    mid = float(cosine_schedule(cfg, jnp.asarray(25)))
+    assert abs(mid - 0.5) < 1e-6          # still ramping
+    at = float(cosine_schedule(cfg, jnp.asarray(50)))
+    after = float(cosine_schedule(cfg, jnp.asarray(80)))
+    assert abs(at - 1.0) < 1e-6
+    assert abs(after - 1.0) < 1e-6
+    assert np.isfinite(at) and np.isfinite(after)
+
+
 # ----------------------------------------------------------- checkpoint ---
 
 
