@@ -16,6 +16,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      (asserted bit-identical and intermediate-free), and the
                      trace-time autotuner's tile choice vs the static
                      default under the shared roofline model.
+  * knn_*          - fused top-k kNN kernel: fused distance+merge vs the
+                     materializing tile-then-top_k baseline at equal tiles
+                     (asserted bit-identical; zero HBM-resident distance
+                     tiles on the fused path, asserted by jaxpr variable
+                     counting), the kNN autotuner's tile choice vs the
+                     static default, and the device-side padded-CSR build.
   * frontier_*     - sparse scale regime: landmark-panel geodesics vs the
                      dense APSP at the same n (asserted faster above the
                      crossover), the frontier autotuner's knobs vs the
@@ -167,11 +173,18 @@ def bench_kernels():
     _row("kernel_pairwise_1024x784", t, f"{2 * 1024 * 1024 * 784 / t / 1e9:.1f}_GFLOP_s")
 
 
-def _shaped_vars(jaxpr, shape) -> int:
+def _shaped_vars(jaxpr, shape, *, skip_pallas: bool = False) -> int:
     """Count intermediate variables of `shape` across a closed jaxpr
     (recursing into sub-jaxprs).  A materializing composition carries the
     full min-plus product as an extra variable of the panel's shape; the
-    fused kernels never create one."""
+    fused kernels never create one.
+
+    skip_pallas: don't recurse into pallas_call bodies.  Variables inside
+    a kernel body live in VMEM by construction; with the bodies skipped,
+    the count is exactly the HBM-resident variables of `shape` — a
+    pallas_call *output* of that shape still counts (outvars are walked
+    before params), which is what distinguishes a kernel that returns a
+    distance tile from one that merges it in VMEM."""
     count = 0
 
     def walk(jx):
@@ -181,6 +194,8 @@ def _shaped_vars(jaxpr, shape) -> int:
                 aval = getattr(v, "aval", None)
                 if aval is not None and getattr(aval, "shape", None) == shape:
                     count += 1
+            if skip_pallas and eq.primitive.name == "pallas_call":
+                continue
             for sub in eq.params.values():
                 subs = sub if isinstance(sub, (list, tuple)) else (sub,)
                 for s in subs:
@@ -439,6 +454,148 @@ def bench_frontier(smoke: bool = False):
     )
 
 
+def bench_knn(smoke: bool = False):
+    """Fused top-k kNN sweep (--only knn; CI runs it --smoke).
+
+    Three claims, asserted rather than just reported:
+
+    1. the fused distance+merge kNN path is bit-identical to the
+       materializing compute-tile-then-top_k composition at the same
+       tile sizes, and beats it wall-clock (the chunked fold wins off-TPU
+       too — it tops-k over (block, k + chunk) instead of (block, block));
+    2. the fused path's jaxpr carries ZERO HBM-resident variables of the
+       distance-tile shape — the (bm, bn) tile lives only in VMEM —
+       while the materializing baseline returns one per column step;
+    3. the kNN autotuner's (bm, bn) choice models no slower than the
+       clamped static default under the shared roofline (measured too
+       on TPU).
+    """
+    from repro.core import graph, knn
+    from repro.data import euler_isometric_swiss_roll
+    from repro.kernels import autotune
+
+    n = 512 if smoke else 2048
+    k = 10
+    block = min(256, n)
+    x, _ = euler_isometric_swiss_roll(n, seed=0)
+    x = jnp.asarray(x)
+    dfeat = x.shape[1]
+    on_tpu = jax.default_backend() == "tpu"
+
+    # 1. + 2. run both paths at the SAME pinned (block, block) tiles so
+    # the comparison isolates the fusion, not a tile-size difference
+    prev = os.environ.get(autotune.ENV_KNN_TILES)
+    os.environ[autotune.ENV_KNN_TILES] = f"{block},{block}"
+    autotune.clear_cache()
+    knn.knn_blocked.clear_cache()
+    knn.knn_blocked_materializing.clear_cache()
+    try:
+        def fused():
+            return knn.knn_blocked(x, k=k, block=block)
+
+        def materializing():
+            return knn.knn_blocked_materializing(x, k=k, block=block)
+
+        t_fused = _timeit(fused, repeats=2)
+        t_mat = _timeit(materializing, repeats=2)
+        fd, fi = fused()
+        md, mi = materializing()
+        assert np.array_equal(np.asarray(fd), np.asarray(md)) and (
+            np.array_equal(np.asarray(fi), np.asarray(mi))
+        ), "fused kNN is not bit-identical to the materializing baseline"
+        assert t_fused < t_mat, (
+            f"fused kNN ({t_fused:.4f}s) is not beating the "
+            f"materializing baseline ({t_mat:.4f}s) at equal "
+            f"({block}, {block}) tiles"
+        )
+        _row(
+            f"knn_fused_n{n}_b{block}", t_fused,
+            f"{t_mat / t_fused:.2f}x_vs_materializing",
+        )
+        _row(f"knn_materializing_n{n}_b{block}", t_mat, "baseline")
+
+        # 2. residency: trace what the TPU executes (mode="pallas") and
+        # count HBM-resident (block, block) vars — kernel-internal VMEM
+        # vars are skipped, kernel *outputs* still count, so the
+        # materializing path's returned distance tile is visible
+        jx_fused = jax.make_jaxpr(
+            lambda x: knn.knn_blocked(x, k=k, block=block, mode="pallas")
+        )(x)
+        jx_mat = jax.make_jaxpr(
+            lambda x: knn.knn_blocked_materializing(
+                x, k=k, block=block, mode="pallas"
+            )
+        )(x)
+        shape = (block, block)
+        n_fused = _shaped_vars(jx_fused, shape, skip_pallas=True)
+        n_mat = _shaped_vars(jx_mat, shape, skip_pallas=True)
+        assert n_fused == 0, (
+            f"fused kNN path materializes {n_fused} ({block}, {block}) "
+            "distance tiles in HBM - the fusion regressed"
+        )
+        assert n_mat > 0, "jaxpr walk saw no distance tile - bad probe"
+        _row(
+            "knn_residency", 0.0,
+            f"fused_tile_vars={n_fused}_materializing={n_mat}",
+        )
+    finally:
+        if prev is None:
+            os.environ.pop(autotune.ENV_KNN_TILES, None)
+        else:
+            os.environ[autotune.ENV_KNN_TILES] = prev
+        autotune.clear_cache()
+        knn.knn_blocked.clear_cache()
+        knn.knn_blocked_materializing.clear_cache()
+
+    # 3. autotuned tiles model no slower than the clamped static default
+    # (one launch = block query rows against all n points)
+    cfg, cost = autotune.best_knn_config(block, n, dfeat, k)
+    dflt = autotune.KnnConfig(
+        min(autotune.KNN_DEFAULT.bm, block), min(autotune.KNN_DEFAULT.bn, n)
+    )
+    dcost = autotune.knn_cost(block, n, dfeat, k, dflt)
+    assert cost.time_s <= dcost.time_s * (1.0 + 1e-9), (
+        f"autotuned kNN config {cfg} models slower than the static "
+        f"default {dflt}"
+    )
+    _row(
+        "knn_autotune", cost.time_s,
+        f"bm{cfg.bm}_bn{cfg.bn}_"
+        f"{dcost.time_s / cost.time_s:.2f}x_vs_default_modeled",
+    )
+    if on_tpu:
+        def run_pinned(pin):
+            prev = os.environ.get(autotune.ENV_KNN_TILES)
+            os.environ[autotune.ENV_KNN_TILES] = pin
+            autotune.clear_cache()
+            knn.knn_blocked.clear_cache()
+            try:
+                return _timeit(
+                    lambda: knn.knn_blocked(x, k=k, block=block), repeats=3
+                )
+            finally:
+                if prev is None:
+                    os.environ.pop(autotune.ENV_KNN_TILES, None)
+                else:
+                    os.environ[autotune.ENV_KNN_TILES] = prev
+                autotune.clear_cache()
+                knn.knn_blocked.clear_cache()
+
+        t_tuned = run_pinned(f"{cfg.bm},{cfg.bn}")
+        t_dflt = run_pinned(f"{dflt.bm},{dflt.bn}")
+        _row(
+            "knn_autotune_measured", t_tuned,
+            f"{t_dflt / t_tuned:.2f}x_vs_default",
+        )
+
+    # device-side CSR build on the fused path's output (one host sync
+    # for the overflow scalar, no O(n k) edge-list round-trip)
+    d_knn, i_knn = knn.knn_blocked(x, k=k, block=block)
+    t_csr = _timeit(lambda: graph.knn_to_padded_csr(d_knn, i_knn, n=n))
+    nbr, _w = graph.knn_to_padded_csr(d_knn, i_knn, n=n)
+    _row(f"knn_csr_device_n{n}", t_csr, f"deg={nbr.shape[1]}")
+
+
 def bench_spectral():
     """Alg. 2 convergence: iterations + time vs d."""
     from repro.core import centering, spectral
@@ -631,6 +788,7 @@ _BENCHES = {
     "kernels": bench_kernels,
     "apsp_phase2": bench_apsp_phase2,
     "frontier": bench_frontier,
+    "knn": bench_knn,
     "scaling": bench_scaling,
     "blocksize": bench_blocksize,
     "spectral": bench_spectral,

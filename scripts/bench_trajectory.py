@@ -1,0 +1,140 @@
+"""Fold a day's BENCH_<date>.json headline rows into the tracked
+benchmark trajectory.
+
+``benchmarks/run.py`` (and the serving benches) write their rows to
+``BENCH_<date>.json`` at the repo root — machine-readable but
+gitignored, so each file is one machine on one day.  This script merges
+those rows into ``benchmarks/trajectory.json``, which IS tracked: a
+per-row-name series of {date, backend, label, ...} points, so the
+history of every headline number (fused-vs-materializing speedups,
+autotune ratios, serving latencies) survives in the repo and a
+regression shows up as a kink in a series rather than a vanished
+artifact.
+
+Points are keyed by (date, backend, label): re-running on the same day
+with the same label replaces the point (runs are idempotent), a
+different label (e.g. ``--label ci-smoke`` vs a maintainer's full run)
+appends alongside.  The write is atomic (tmp file + ``os.replace``) so
+a crashed run never truncates the tracked history.
+
+Usage:
+    python scripts/bench_trajectory.py [--bench-json PATH] [--out PATH]
+                                       [--label LABEL] [--prefix PFX ...]
+
+Stdlib only — no repro imports, safe to run before PYTHONPATH is set.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sys
+import tempfile
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def load_bench(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def load_trajectory(path: str) -> dict:
+    if not os.path.exists(path):
+        return {"series": {}}
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    data.setdefault("series", {})
+    return data
+
+
+def merge(trajectory: dict, bench: dict, label: str, prefixes) -> int:
+    """Merge bench rows into the trajectory in place; returns the number
+    of points written.  A point carries the bench file's date/backend,
+    the run label, and every row field except the name."""
+    date = bench.get("date", str(datetime.date.today()))
+    backend = bench.get("backend", "unknown")
+    series = trajectory["series"]
+    written = 0
+    for row in bench.get("rows", []):
+        name = row.get("name")
+        if not name:
+            continue
+        if prefixes and not any(name.startswith(p) for p in prefixes):
+            continue
+        point = {k: v for k, v in row.items() if k != "name"}
+        point.update(
+            {"date": date, "backend": row.get("backend", backend),
+             "label": label}
+        )
+        key = (point["date"], point["backend"], point["label"])
+        points = series.setdefault(name, [])
+        for i, old in enumerate(points):
+            if (old.get("date"), old.get("backend"),
+                    old.get("label")) == key:
+                points[i] = point
+                break
+        else:
+            points.append(point)
+        written += 1
+    return written
+
+
+def atomic_write(path: str, data: dict) -> None:
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(path) or ".", suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w", encoding="utf-8") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench-json",
+        default=os.path.join(
+            REPO, f"BENCH_{datetime.date.today().isoformat()}.json"
+        ),
+        help="day file to fold in (default: today's at the repo root)",
+    )
+    ap.add_argument(
+        "--out",
+        default=os.path.join(REPO, "benchmarks", "trajectory.json"),
+        help="tracked trajectory file (default: benchmarks/trajectory.json)",
+    )
+    ap.add_argument(
+        "--label", default="local",
+        help="run label; same (date, backend, label) replaces its point",
+    )
+    ap.add_argument(
+        "--prefix", action="append", default=None, metavar="PFX",
+        help="only fold rows whose name starts with PFX (repeatable; "
+        "default: all rows)",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.bench_json):
+        print(f"bench_trajectory: no bench file at {args.bench_json}; "
+              "nothing to fold", file=sys.stderr)
+        return 0
+    bench = load_bench(args.bench_json)
+    trajectory = load_trajectory(args.out)
+    written = merge(trajectory, bench, args.label, args.prefix)
+    atomic_write(args.out, trajectory)
+    print(f"bench_trajectory: folded {written} row(s) from "
+          f"{os.path.basename(args.bench_json)} into "
+          f"{os.path.relpath(args.out, REPO)} "
+          f"({len(trajectory['series'])} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -57,8 +56,70 @@ def connected_components_lower_bound(g: jax.Array, iters: int = 32):
     return jnp.unique(lab).shape[0]
 
 
+@functools.partial(jax.jit, static_argnames=("n", "deg"))
+def _padded_csr_device(dists, idx, *, n: int, deg: int):
+    """Fixed-shape XLA form of the symmetrize/dedupe/bucket pipeline.
+
+    Every step is shape-static: the data-dependent filtering the old
+    host-numpy build did with boolean masks is replaced by *retiring*
+    edges to a virtual row n that sorts past every real row and falls
+    out of bounds at the scatter — a three-key ``lax.sort`` puts each
+    row's deduplicated edges in a contiguous run, a ``searchsorted`` of
+    the row keys against themselves recovers each edge's lane within its
+    row, and one uniquely-indexed scatter writes the (n, deg) padded
+    lists.  Returns (nbr, w, overflow) where ``overflow`` is True iff
+    some row holds more than ``deg`` live edges (its tail edges were
+    dropped) — the caller retries with a doubled cap.
+    """
+    k = dists.shape[1]
+    rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    cols = idx.reshape(-1).astype(jnp.int32)
+    vals = jnp.sqrt(jnp.maximum(dists.reshape(-1), 0.0)).astype(jnp.float32)
+    # symmetrize: each directed kNN pair contributes both orientations
+    # (stack + reshape rather than concatenate: XLA's partitioner
+    # mis-lowers axis-0 concatenation of row-sharded operands on some
+    # backends, sum-combining the replicated mesh axis)
+    src = jnp.stack([rows, cols]).reshape(-1)
+    dst = jnp.stack([cols, rows]).reshape(-1)
+    val = jnp.stack([vals, vals]).reshape(-1)
+    # self-edges are implicit (distance 0); kNN pad lanes carry index -1
+    # and weight +inf — retire both kinds to the overflow row
+    dead = (src == dst) | (src < 0) | (dst < 0) | ~jnp.isfinite(val)
+    src = jnp.where(dead, n, src)
+    dst = jnp.where(dead, n, dst)
+    val = jnp.where(dead, jnp.inf, val)
+    # dedupe (src, dst) keeping the min weight: sort by (src, dst, val),
+    # keep first occurrences, retire the duplicates
+    src, dst, val = jax.lax.sort((src, dst, val), num_keys=3)
+    pos = jnp.arange(src.shape[0], dtype=jnp.int32)
+    first = (pos == 0) | (src != jnp.roll(src, 1)) | (dst != jnp.roll(dst, 1))
+    first &= src < n
+    src = jnp.where(first, src, n)
+    dst = jnp.where(first, dst, n)
+    val = jnp.where(first, val, jnp.inf)
+    # compact: stable sort by row alone keeps each row's (dst, val)
+    # order, then an edge's lane is its offset into its row's run
+    src, dst, val = jax.lax.sort((src, dst, val), num_keys=1, is_stable=True)
+    lane = (
+        jnp.arange(src.shape[0], dtype=jnp.int32)
+        - jnp.searchsorted(src, src, side="left").astype(jnp.int32)
+    )
+    overflow = jnp.any((src < n) & (lane >= deg))
+    # every in-bounds (row, lane) is unique: live edges have unique lanes
+    # within their row; retired edges (src == n) and overflowing lanes
+    # (lane >= deg) are sent out of bounds and dropped.  Uniqueness lets
+    # the SPMD partitioner keep the overwrite semantics — with colliding
+    # indices it may lower the scatter with a sum combiner, which
+    # multiplies replicated updates by the replication factor.
+    nbr = jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None], (1, deg))
+    w = jnp.full((n, deg), jnp.inf, dtype=jnp.float32)
+    nbr = nbr.at[src, lane].set(dst, mode="drop", unique_indices=True)
+    w = w.at[src, lane].set(val, mode="drop", unique_indices=True)
+    return nbr, w, overflow
+
+
 def knn_to_padded_csr(
-    dists, idx, *, n: int
+    dists, idx, *, n: int, deg: int | None = None
 ) -> tuple[jax.Array, jax.Array]:
     """(n, k) squared kNN distances + indices -> padded-CSR adjacency.
 
@@ -66,41 +127,27 @@ def knn_to_padded_csr(
     the symmetrized union graph (edge i-j present when either endpoint
     listed the other), deduplicated per row with the min edge weight kept
     — exactly the edge set :func:`knn_to_graph` produces, but in
-    O(n * deg) with ``deg <= 2k``.  Padded lanes point at the row itself
-    with weight +inf so the frontier kernel's min never selects them.
+    O(n * deg).  Padded lanes point at the row itself with weight +inf
+    so the frontier kernel's min never selects them.  kNN pad lanes
+    (index -1, weight +inf) are ignored.
 
-    Built host-side with numpy: the symmetrize/dedupe is data-dependent
-    bucketing that has no fixed-shape XLA form without a dense (n, n)
-    scatter — which is precisely what the sparse regime must avoid.  It
-    runs once per fit, off the accelerator, at O(n k log(n k)).
+    Built on device (:func:`_padded_csr_device`): sort-based dedupe +
+    one fixed-shape scatter, O(n k log(n k)), no host round-trip of the
+    O(n k) edge lists.  The row width is the only data-dependent piece:
+    ``deg`` starts at 2k (the typical in+out bound) and doubles — one
+    scalar host sync per attempt — while some hub row overflows; pass
+    ``deg`` explicitly to pin the width (e.g. to match a checkpoint).
     """
-    dists = np.asarray(dists)
-    idx = np.asarray(idx)
-    k = dists.shape[1]
-    rows = np.repeat(np.arange(n, dtype=np.int64), k)
-    cols = idx.reshape(-1).astype(np.int64)
-    vals = np.sqrt(np.maximum(dists.reshape(-1), 0.0)).astype(np.float32)
-    # symmetrize: each directed kNN pair contributes both orientations
-    src = np.concatenate([rows, cols])
-    dst = np.concatenate([cols, rows])
-    val = np.concatenate([vals, vals])
-    keep = src != dst  # self-edges are implicit (distance 0)
-    src, dst, val = src[keep], dst[keep], val[keep]
-    # dedupe (src, dst) keeping the min weight: sort by (src, dst, val)
-    order = np.lexsort((val, dst, src))
-    src, dst, val = src[order], dst[order], val[order]
-    first = np.ones(src.shape[0], dtype=bool)
-    first[1:] = (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])
-    src, dst, val = src[first], dst[first], val[first]
-    counts = np.bincount(src, minlength=n)
-    deg = max(1, int(counts.max()) if counts.size else 1)
-    nbr = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, deg))
-    w = np.full((n, deg), np.inf, dtype=np.float32)
-    row_starts = np.cumsum(counts) - counts
-    lane = np.arange(src.shape[0]) - np.repeat(row_starts, counts)
-    nbr[src, lane] = dst.astype(np.int32)
-    w[src, lane] = val
-    return jnp.asarray(nbr), jnp.asarray(w)
+    k = idx.shape[1]
+    cap = max(n - 1, 1)  # a row's deduped neighbours exclude itself
+    pinned = deg is not None
+    if not pinned:
+        deg = min(max(2 * k, 1), cap)
+    while True:
+        nbr, w, overflow = _padded_csr_device(dists, idx, n=n, deg=deg)
+        if pinned or deg >= cap or not bool(overflow):
+            return nbr, w
+        deg = min(2 * deg, cap)
 
 
 def connected_components_lower_bound_csr(nbr, w, iters: int = 32):

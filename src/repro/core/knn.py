@@ -2,28 +2,36 @@
 
 Two paths with identical semantics:
 
-* :func:`knn_blocked` - single-device blocked brute force.  The (n, n)
-  distance matrix is produced tile-by-tile (Pallas pairwise kernel on TPU)
-  and a running top-k per row is folded across column tiles, so the full
-  matrix is never materialized - the analogue of the paper's
-  block-pair/flatMap + heap-merge scheme.
+* :func:`knn_blocked` - single-device blocked brute force.  Each row
+  block makes one fused :func:`repro.kernels.ops.knn_topk` launch that
+  folds every column tile into the running per-row candidate list while
+  the (bm, bn) distance tile is still in VMEM - the analogue of the
+  paper's block-pair/flatMap + heap-merge scheme, with the heap merge
+  fused into the distance kernel so no distance tile reaches HBM.
+  (:func:`knn_blocked_materializing` keeps the old
+  compute-tile-then-top_k composition as the benchmark baseline and
+  bit-identity witness.)
 
 * :func:`knn_ring` - shard_map ring algorithm for a 1-D row decomposition.
   Each of the p shards holds an (n/p, D) slab; at step t the slab received
-  from the ring neighbour is used to compute one (n/p, n/p) distance block
-  while `lax.ppermute` forwards it on.  After p steps every block pair has
+  from the ring neighbour is merged into the shard's candidate lists by
+  one fused kernel launch (seeded with the previous step's lists) while
+  `lax.ppermute` forwards the slab on.  After p steps every block pair has
   been computed exactly once - this replaces the paper's upper-triangular
   block enumeration (no (J,I) duplicates, no filter pass) and overlaps
-  communication with compute.
+  communication with compute.  Row counts that do not divide the mesh are
+  padded with masked sentinel rows and the pad is stripped from the
+  returned shards.
 
 Distances returned are *squared* Euclidean; the neighbourhood graph stage
 takes the sqrt (the paper builds G from Euclidean distances and squares
-again after APSP).
+again after APSP).  Candidate lists are ranked by (distance, then column
+index on ties); rows with fewer than k valid neighbours carry (+inf, -1)
+tails.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +58,44 @@ def knn_blocked(
     """Exact kNN of every row of x (n, D) against all others.
 
     Returns (dists, idx), each (n, k), sorted ascending; squared distances.
-    Self-matches are excluded.
+    Self-matches are excluded.  One fused kernel launch per row block
+    folds all column tiles in VMEM (tile sizes from the kNN autotuner,
+    ``REPRO_KNN_TILES`` pins); ``block`` only sets how many rows each
+    launch covers.
+    """
+    n, _ = x.shape
+    block = min(block, n)
+    n_orig = n
+    if n % block:
+        pad = block - n % block
+        # sentinel rows: masked out of every merge via n_valid below
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        n += pad
+    q = n // block
+
+    def row_block(i):
+        xi = jax.lax.dynamic_slice_in_dim(x, i * block, block, 0)
+        seed_d = jnp.full((block, k), _BIG)
+        seed_i = jnp.full((block, k), -1, jnp.int32)
+        return ops.knn_topk(
+            xi, x, seed_d, seed_i,
+            row0=i * block, col0=0, n_valid=n_orig, mode=mode,
+        )
+
+    ds, is_ = jax.lax.map(row_block, jnp.arange(q))
+    return ds.reshape(n, k)[:n_orig], is_.reshape(n, k)[:n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "mode"))
+def knn_blocked_materializing(
+    x: jax.Array, *, k: int, block: int = 1024, mode: str = "auto"
+):
+    """The pre-fusion kNN path: compute each (block, block) distance tile
+    with the pairwise kernel, write it out, then top-k + fold in XLA.
+
+    Kept as the benchmark baseline (``benchmarks/run.py --only knn``
+    asserts the fused path beats it wall-clock at equal tiles and is
+    bit-identical to it) - do not use it for real workloads.
     """
     n, _ = x.shape
     block = min(block, n)
@@ -101,20 +146,30 @@ def knn_ring(
 
     Rows ride a `ppermute` ring over `row_axis` (each block pair computed
     exactly once - the TPU form of the paper's upper-triangular block
-    enumeration).  The feature dimension is sharded over `feat_axis`; with
+    enumeration); row counts that do not divide the mesh are padded with
+    masked sentinel rows and the pad is stripped from the result.  The
+    feature dimension is sharded over `feat_axis`; with
     ``gather_features`` (default, see EXPERIMENTS.md SPerf cell D) each
     device all-gathers its slab's features once up front (O(local x D)
-    moved) and distance blocks stay local; otherwise the additive
-    decomposition of ||x-y||^2 is psum-reduced per ring step (O(local^2)
-    per step - the faithful-but-naive baseline).  `split_axis` (e.g. the
-    "pod" axis) splits the ring walk: each replica group starts at a
-    rotated offset and walks p/|split| of the ring, with a final
-    cross-group top-k merge - this is how the multi-pod mesh parallelizes
-    the kNN stage across pods.  Returns (dists, idx), row-sharded like x.
+    moved) and every ring step is one fused :func:`repro.kernels.ops
+    .knn_topk` launch seeded with the previous step's candidate lists -
+    the (local, local) distance block lives only in VMEM; otherwise the
+    additive decomposition of ||x-y||^2 is psum-reduced per ring step
+    (O(local^2) per step - the faithful-but-naive baseline, which does
+    materialize the block).  `split_axis` (e.g. the "pod" axis) splits
+    the ring walk: each replica group starts at a rotated offset and
+    walks p/|split| of the ring, with a final cross-group top-k merge -
+    this is how the multi-pod mesh parallelizes the kNN stage across
+    pods.  Returns (dists, idx), row-sharded like x.
     """
     p = mesh.shape[row_axis]
-    n = x.shape[0]
-    assert n % p == 0, (n, p)
+    n_orig = x.shape[0]
+    pad = -n_orig % p
+    if pad:
+        # sentinel rows so every shard holds the same local count; their
+        # columns are masked via n_valid and their rows stripped below
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = n_orig + pad
     local = n // p
     perm = [(i, (i + 1) % p) for i in range(p)]
     n_split = mesh.shape[split_axis] if split_axis else 1
@@ -124,7 +179,7 @@ def knn_ring(
     def shard_fn(xs):
         # xs: (local, D_local) slab of this shard
         me = jax.lax.axis_index(row_axis)
-        rows = me * local + jnp.arange(local)[:, None]
+        fused = gather_features or feat_axis is None
         if gather_features and feat_axis is not None:
             # one up-front feature gather; every distance block after
             # this is communication-free (vs a psum of the full
@@ -145,30 +200,36 @@ def knn_ring(
 
         def step(t, carry):
             best_d, best_i, buf, owner = carry
-            cols = owner * local + jnp.arange(local)[None, :]
-            d = ops.pairwise_sq_dists(xs, buf, mode=mode)
-            if feat_axis is not None and not gather_features:
+            if fused:
+                # fused merge: the received slab's columns fold into the
+                # running lists inside the kernel, seeded from the
+                # previous step - self-match and sentinel-row masking
+                # happen in-kernel from the traced offsets
+                best_d, best_i = ops.knn_topk(
+                    xs, buf, best_d, best_i,
+                    row0=me * local, col0=owner * local,
+                    n_valid=n_orig, mode=mode,
+                )
+            else:
+                rows = me * local + jnp.arange(local)[:, None]
+                cols = owner * local + jnp.arange(local)[None, :]
+                d = ops.pairwise_sq_dists(xs, buf, mode=mode)
                 d = jax.lax.psum(d, feat_axis)
-            d = jnp.where(rows == cols, _BIG, d)
-            nd, ni = jax.lax.top_k(-d, k)
-            best_d, best_i = _fold_topk(
-                best_d,
-                best_i,
-                -nd,
-                jnp.take_along_axis(
-                    jnp.broadcast_to(cols, (local, local)), ni, axis=1
-                ),
-                k,
-            )
-            # rotate the slab around the ring; the permute overlaps with the
-            # next step's distance computation
+                dead = (rows == cols) | (cols >= n_orig)
+                d = jnp.where(dead, _BIG, d)
+                ci = jnp.where(
+                    dead, -1, jnp.broadcast_to(cols, (local, local))
+                )
+                best_d, best_i = _fold_topk(best_d, best_i, d, ci, k)
+            # rotate the slab around the ring; the permute overlaps with
+            # the next step's distance computation
             buf = jax.lax.ppermute(buf, row_axis, perm)
             owner = jax.lax.ppermute(owner, row_axis, perm)
             return best_d, best_i, buf, owner
 
         init = (
             jnp.full((local, k), _BIG),
-            jnp.zeros((local, k), jnp.int32),
+            jnp.full((local, k), -1, jnp.int32),
             buf,
             owner,
         )
@@ -190,4 +251,5 @@ def knn_ring(
         out_specs=(P(row_axis, None), P(row_axis, None)),
         check_vma=False,
     )
-    return jax.jit(fn)(x)
+    d, i = jax.jit(fn)(x)
+    return (d[:n_orig], i[:n_orig]) if pad else (d, i)

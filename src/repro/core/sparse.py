@@ -332,7 +332,7 @@ def map_new_points_panel(
     mapper's min-over-anchors), then applies the fitted triangulation
     operator.  Returns (y (b, d), geo_lm (b, m)) — the landmark columns
     are reused by the absorb path as the new points' panel columns."""
-    d2 = ops.pairwise_sq_dists(x_new, x_base, mode="ref")
+    d2 = ops.pairwise_sq_dists(x_new, x_base)
     nd, idx = jax.lax.top_k(-d2, k)
     anchor_d = jnp.sqrt(jnp.maximum(-nd, 0.0))          # (b, k)
     cols = jnp.transpose(panel[:, idx], (1, 2, 0))      # (b, k, m)

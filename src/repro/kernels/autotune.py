@@ -446,7 +446,183 @@ def frontier_config(n: int, deg: int, m: int) -> FrontierConfig:
     return cfg
 
 
+# ----------------------------------------------------- fused kNN kernel --
+# Knobs of the fused top-k kNN kernel (repro.kernels.knn_topk): (bm, bn)
+# query/candidate tile sizes.  Unlike the min-plus family the distance
+# tile rides the MXU (f32 matmul) while the k-merge selection is VPU
+# work, so the cost model sums both terms; and because ops.knn_topk pads
+# to tile multiples, candidates need not divide the problem — padded
+# fractions are charged in the model instead.
+
+ENV_KNN_TILES = "REPRO_KNN_TILES"
+ENV_KNN_AUTOTUNE = "REPRO_KNN_AUTOTUNE"
+
+#: f32 matmul throughput on the MXU (half the bf16 peak)
+MXU_F32_FLOPS = PEAK_FLOPS / 2
+
+
+class KnnConfig(NamedTuple):
+    """Static tile knobs of one fused kNN kernel launch."""
+
+    bm: int
+    bn: int
+
+
+KNN_DEFAULT = KnnConfig(bm=256, bn=256)
+
+
+def knn_cost(
+    m: int, n: int, d: int, k: int, cfg: KnnConfig, *, itemsize: int = 4
+) -> Cost:
+    """Roofline terms for one fused kNN launch: m query rows against n
+    candidate rows of depth d, keeping k per row.
+
+    Compute is MXU matmul (2 m n d f32 FLOPs over the padded problem)
+    plus the VPU k-merge: per (bm, bn) tile, k extraction steps over the
+    (bm, bn + k) candidate stream at ~6 elementwise ops each (min,
+    compare, masked-min, select x2, retire), derated by register fill.
+    HBM traffic is the tiled re-reads of the point blocks plus one
+    seed-read / output-write of the (m, k) lists — the distance tile
+    itself never reaches HBM, which is the point of the fusion.
+    """
+    bm, bn = min(cfg.bm, m), min(cfg.bn, n)
+    mp = -(-m // bm) * bm       # padded problem dims (ops.knn_topk pads)
+    np_ = -(-n // bn) * bn
+    gm, gn = mp // bm, np_ // bn
+
+    matmul_s = (2.0 * mp * np_ * d) / MXU_F32_FLOPS
+    lane_fill = min(bn + k, 128) / 128.0
+    sublane_fill = min(bm, 8) / 8.0
+    select_s = (6.0 * k * (bn + k) * bm * gm * gn) / (
+        VPU_OPS * lane_fill * sublane_fill
+    )
+    compute_s = matmul_s + select_s
+
+    hbm_bytes = itemsize * (
+        mp * d * gn        # x tiles, re-read per column pass
+        + np_ * d * gm     # y tiles, re-read per row pass
+        + 2 * mp * k       # seed lists read (dists + indices)
+        + 2 * mp * k       # output lists write
+    )
+    hbm_s = hbm_bytes / HBM_BW
+
+    # VMEM: double-buffered point tiles, the distance tile, the
+    # (bm, bn + k) vals/idxs/pos merge working set, running + output lists
+    vmem = itemsize * (
+        2 * (bm * d + bn * d)
+        + bm * bn
+        + 3 * bm * (bn + k)
+        + 4 * bm * k
+    )
+    return Cost(
+        time_s=max(compute_s, hbm_s),
+        compute_s=compute_s,
+        hbm_s=hbm_s,
+        hbm_bytes=float(hbm_bytes),
+        vmem_bytes=vmem,
+    )
+
+
+def _pow2_tiles(dim: int, *, cap: int = 512) -> list[int]:
+    """Power-of-two tile sizes up to the first one covering ``dim`` (no
+    divisibility requirement — ops.knn_topk pads to a tile multiple)."""
+    return [t for t in (8, 16, 32, 64, 128, 256, 512)
+            if t <= cap and (t == 8 or t < 2 * dim)]
+
+
+def knn_candidates(m: int, n: int, k: int) -> Iterator[KnnConfig]:
+    """Enumerate fused-kNN tile configs; the clamped static default is
+    always included so the winner never models slower than it."""
+    seen = set()
+    for bm in _pow2_tiles(m):
+        for bn in _pow2_tiles(n):
+            cfg = KnnConfig(bm, bn)
+            if cfg not in seen:
+                seen.add(cfg)
+                yield cfg
+    dflt = KnnConfig(min(KNN_DEFAULT.bm, m), min(KNN_DEFAULT.bn, n))
+    if dflt not in seen:
+        yield dflt
+
+
+@functools.lru_cache(maxsize=4096)
+def best_knn_config(
+    m: int, n: int, d: int, k: int, *, itemsize: int = 4
+) -> tuple[KnnConfig, Cost]:
+    """Sweep :func:`knn_candidates` under :func:`knn_cost`; candidates
+    busting the VMEM budget fall back to the smallest working set."""
+    best = None
+    fallback = None
+    for cfg in knn_candidates(m, n, k):
+        cost = knn_cost(m, n, d, k, cfg, itemsize=itemsize)
+        fkey = (cost.vmem_bytes, cost.time_s)
+        if fallback is None or fkey < fallback[0]:
+            fallback = (fkey, cfg, cost)
+        if cost.vmem_bytes > VMEM_BUDGET:
+            continue
+        # tie-break toward larger tiles (fewer grid passes, less refetch)
+        key = (cost.time_s, -(cfg.bm * cfg.bn))
+        if best is None or key < best[0]:
+            best = (key, cfg, cost)
+    if best is None:
+        best = fallback
+    return best[1], best[2]
+
+
+def _parse_knn_override(raw: str) -> KnnConfig:
+    parts = raw.split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"{ENV_KNN_TILES}={raw!r}: expected 'bm,bn' "
+            "(two comma-separated ints)"
+        )
+    try:
+        bm, bn = (int(p) for p in parts)
+    except ValueError as e:
+        raise ValueError(f"{ENV_KNN_TILES}={raw!r}: {e}") from None
+    if min(bm, bn) < 1:
+        raise ValueError(f"{ENV_KNN_TILES}={raw!r}: tiles must be >= 1")
+    return KnnConfig(bm, bn)
+
+
+def knn_config(m: int, n: int, d: int, k: int) -> KnnConfig:
+    """Resolve the fused-kNN tiles for one launch.
+
+    Resolution order mirrors :func:`tiles_for`:
+
+    1. ``REPRO_KNN_TILES=bm,bn`` — pinned for every call.
+    2. ``REPRO_KNN_AUTOTUNE=0`` — the static default, clamped.
+    3. Otherwise the cached roofline sweep (:func:`best_knn_config`).
+    """
+    raw = os.environ.get(ENV_KNN_TILES)
+    if raw:
+        return _parse_knn_override(raw)
+    if os.environ.get(ENV_KNN_AUTOTUNE, "1").lower() in (
+        "0", "false", "off"
+    ):
+        return KnnConfig(min(KNN_DEFAULT.bm, m), min(KNN_DEFAULT.bn, n))
+    cfg, _ = best_knn_config(m, n, d, k)
+    return cfg
+
+
+# --------------------------------------------------- pairwise auto-shrink --
+
+
+def pairwise_tiles(m: int, n: int, d: int, *, cap: int = 512) -> dict:
+    """Largest dividing tiles for the (non-fused) pairwise kernel — the
+    auto-shrink path :func:`repro.kernels.ops.pairwise_sq_dists` takes
+    when no explicit tiles are given, so shapes the static 512 defaults
+    do not divide shrink to a legal tiling instead of crashing on the
+    kernel's divisibility assert."""
+    return {
+        "bm": _tile_sizes(m, cap=cap)[-1],
+        "bn": _tile_sizes(n, cap=cap)[-1],
+        "bd": _tile_sizes(d, cap=cap)[-1],
+    }
+
+
 def clear_cache() -> None:
     """Drop the in-process sweep cache (tests / constant hot-swapping)."""
     best_config.cache_clear()
     best_frontier_config.cache_clear()
+    best_knn_config.cache_clear()

@@ -48,6 +48,7 @@ from repro.kernels.minplus_panel import (
     minplus_panel_row as _mpr_pallas,
 )
 from repro.kernels.frontier import frontier_relax as _fr_pallas
+from repro.kernels.knn_topk import PAD_IDX, knn_topk as _kt_pallas
 from repro.kernels.minplus_update import minplus_update as _mpu_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists as _pd_pallas
 
@@ -261,11 +262,153 @@ def floyd_warshall(d, *, mode: str = "auto"):
 
 
 def pairwise_sq_dists(x, y, *, mode: str = "auto", **tile_kw):
-    """Squared Euclidean distances between rows of x (m, D) and y (n, D)."""
+    """Squared Euclidean distances between rows of x (m, D) and y (n, D).
+
+    Tiles: explicit ``bm``/``bn``/``bd`` kwargs win and are validated up
+    front (a non-dividing override raises a ``ValueError`` naming the
+    shapes and tiles instead of surfacing as the kernel's raw assert);
+    otherwise the tiles auto-shrink to the largest dividing sizes
+    (:func:`repro.kernels.autotune.pairwise_tiles`), so arbitrary shapes
+    run on the Pallas path without the caller tiling by hand.
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    if d != d2:
+        raise ValueError(
+            f"pairwise_sq_dists: feature dims differ: x {(m, d)} vs "
+            f"y {(n, d2)}"
+        )
+    unknown = set(tile_kw) - {"bm", "bn", "bd"}
+    if unknown:
+        raise ValueError(
+            f"pairwise_sq_dists: unknown tile kwargs {sorted(unknown)} "
+            "(expected bm/bn/bd)"
+        )
+    for key, val in tile_kw.items():
+        if not isinstance(val, int) or val < 1:
+            raise ValueError(
+                f"pairwise_sq_dists: tile {key}={val!r} must be a "
+                "positive int"
+            )
+    tiles = {**autotune.pairwise_tiles(m, n, d), **tile_kw}
+    if tile_kw:
+        bm = min(tiles["bm"], m)
+        bn = min(tiles["bn"], n)
+        bd = min(tiles["bd"], d)
+        problems = []
+        if m % bm:
+            problems.append(f"bm={bm} does not divide m={m}")
+        if n % bn:
+            problems.append(f"bn={bn} does not divide n={n}")
+        if d % bd:
+            problems.append(f"bd={bd} does not divide D={d}")
+        if problems:
+            raise ValueError(
+                f"pairwise_sq_dists: invalid tile override for "
+                f"({m}, {d})x({n}, {d}): " + "; ".join(problems)
+            )
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
-        return _pd_pallas(x, y, interpret=interpret, **tile_kw)
+        return _pd_pallas(x, y, interpret=interpret, **tiles)
     return _ref.pairwise_sq_dists_ref(x, y)
+
+
+def knn_topk(
+    x,
+    y,
+    seed_d,
+    seed_i,
+    *,
+    row0=0,
+    col0=0,
+    n_valid=None,
+    mode: str = "auto",
+    **tile_kw,
+):
+    """Fused distances + per-row top-k merge: rank y's rows into x's
+    running candidate lists without the (m, n) distance matrix.
+
+    x (m, D) query rows at global row offset ``row0``; y (n, D)
+    candidate rows at global column offset ``col0``; seed_d/seed_i
+    (m, k) the incoming candidate lists ((+inf, -1) when empty) —
+    seeding is what chains the kernel across column tiles and ring
+    steps.  Columns at or beyond ``n_valid`` (a global count, default
+    ``col0 + n``; traced values fine) and each row's self-match are
+    masked to (+inf, -1) in-kernel.  Returns (dists (m, k) f32,
+    idx (m, k) int32) ranked by (distance, then arrival order); rows
+    with fewer than k live candidates carry (+inf, -1) tails.
+
+    Tiles: explicit ``bm``/``bn`` kwargs win (any positive size — the
+    wrapper pads m/n to tile multiples and strips the pad); otherwise
+    the trace-time roofline autotuner picks per shape
+    (``REPRO_KNN_TILES=bm,bn`` / ``REPRO_KNN_AUTOTUNE=0`` pin, see
+    :func:`repro.kernels.autotune.knn_config`).  Bit-identical to
+    :func:`repro.kernels.ref.knn_topk_ref` across tilings.
+    """
+    m, dfeat = x.shape
+    n, d2 = y.shape
+    if dfeat != d2:
+        raise ValueError(
+            f"knn_topk: feature dims differ: x {(m, dfeat)} vs "
+            f"y {(n, d2)}"
+        )
+    if seed_d.ndim != 2 or seed_d.shape[0] != m:
+        raise ValueError(
+            f"knn_topk: seed_d {seed_d.shape} must be (m={m}, k)"
+        )
+    k = seed_d.shape[1]
+    if seed_i.shape != (m, k):
+        raise ValueError(
+            f"knn_topk: seed_i {seed_i.shape} must match seed_d "
+            f"{seed_d.shape}"
+        )
+    unknown = set(tile_kw) - {"bm", "bn"}
+    if unknown:
+        raise ValueError(
+            f"knn_topk: unknown tile kwargs {sorted(unknown)} "
+            "(expected bm/bn)"
+        )
+    for key, val in tile_kw.items():
+        if not isinstance(val, int) or val < 1:
+            raise ValueError(
+                f"knn_topk: tile {key}={val!r} must be a positive int"
+            )
+    cfg = autotune.knn_config(m, n, dfeat, k)
+    bm = min(tile_kw.get("bm", cfg.bm), m)
+    bn = min(tile_kw.get("bn", cfg.bn), n)
+
+    use_pallas, interpret = _resolve(mode)
+    if not use_pallas:
+        return _ref.knn_topk_ref(
+            x, y, seed_d, seed_i,
+            row0=row0, col0=col0, n_valid=n_valid, chunk=bn,
+        )
+
+    # the kernel masks columns >= hi: both the caller's global validity
+    # bound and this call's own row padding are upper bounds on the
+    # contiguous [col0, col0 + n) range, so one scalar carries both
+    c0 = jnp.asarray(col0, jnp.int32)
+    hi = c0 + n if n_valid is None else jnp.minimum(
+        c0 + n, jnp.asarray(n_valid, jnp.int32)
+    )
+    meta = jnp.stack(
+        [jnp.asarray(row0, jnp.int32), c0, hi]
+    ).reshape(1, 3)
+    seed_d = seed_d.astype(jnp.float32)
+    seed_i = seed_i.astype(jnp.int32)
+    pm, pn = -m % bm, -n % bn
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+        seed_d = jnp.pad(seed_d, ((0, pm), (0, 0)),
+                         constant_values=jnp.inf)
+        seed_i = jnp.pad(seed_i, ((0, pm), (0, 0)),
+                         constant_values=PAD_IDX)
+    if pn:
+        y = jnp.pad(y, ((0, pn), (0, 0)))
+    out_d, out_i = _kt_pallas(
+        x, y, seed_d, seed_i, meta, bm=bm, bn=bn, interpret=interpret
+    )
+    return (out_d[:m], out_i[:m]) if pm else (out_d, out_i)
 
 
 # ---------------------------------------------- Phase-2 panel splitting ----

@@ -198,3 +198,91 @@ def topk_smallest_ref(d: jax.Array, k: int):
     """Indices+values of the k smallest entries per row of d."""
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx
+
+
+# jitted as one program (not op-by-op): bit-identity with the kernel
+# needs XLA to make the same fma-contraction choices for the cancelling
+# x2 + y2 - 2xy combine, and those are per-compilation — an eagerly
+# dispatched x2 can round differently from the same op fused into the
+# kernel's program
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def knn_topk_ref(
+    x: jax.Array,
+    y: jax.Array,
+    seed_d: jax.Array,
+    seed_i: jax.Array,
+    *,
+    row0=0,
+    col0=0,
+    n_valid=None,
+    chunk: int = 256,
+):
+    """Chunked oracle of the fused top-k kNN kernel
+    (:func:`repro.kernels.knn_topk.knn_topk`).
+
+    x (m, D) query rows at global offset ``row0``; y (n, D) candidate
+    rows at global column offset ``col0``; seed_d/seed_i (m, k) the
+    incoming candidate lists ((+inf, -1) when empty).  Columns at or
+    beyond ``n_valid`` (global count, default ``col0 + n``) are masked,
+    as is each row's self-match.  Returns (dists, idx), each (m, k),
+    ranked by (distance, then arrival order) — the stream is
+    [seed list | columns ascending], so ties at the k-boundary go to the
+    earlier seed entry / smaller column index.
+
+    Bit-identical to the Pallas kernel for any (chunk vs bm/bn) tiling:
+    the distance tile replays the kernel's exact op sequence
+    (full-depth MXU product, x2 + y2 - 2xy, clamp at zero — min/compare
+    are exact, one rounding per add), and the per-chunk
+    ``lax.top_k(-cat)`` fold implements the same (value, position)
+    selection the kernel's k-step extraction does: stable first-wins
+    selection over an ordered stream is prefix-stable, so folding in any
+    chunk size yields the whole-stream answer.
+    """
+    m, dfeat = x.shape
+    n, d2 = y.shape
+    assert dfeat == d2, (x.shape, y.shape)
+    k = seed_d.shape[1]
+    assert seed_d.shape == (m, k) and seed_i.shape == (m, k), (
+        seed_d.shape, seed_i.shape,
+    )
+    col0 = jnp.asarray(col0, jnp.int32)
+    hi = col0 + n if n_valid is None else jnp.minimum(
+        col0 + n, jnp.asarray(n_valid, jnp.int32)
+    )
+    chunk = min(chunk, n)
+    pad = -n % chunk
+    y_p = jnp.pad(y, ((0, pad), (0, 0))) if pad else y
+    steps = (n + pad) // chunk
+    x32 = x.astype(jnp.float32)
+    x2 = jnp.sum(x32 * x32, axis=1, keepdims=True)
+    rows = jnp.asarray(row0, jnp.int32) + jnp.arange(m, dtype=jnp.int32)[
+        :, None
+    ]
+
+    def body(c, carry):
+        bd, bi = carry
+        yc = jax.lax.dynamic_slice_in_dim(
+            y_p, c * chunk, chunk, 0
+        ).astype(jnp.float32)
+        y2 = jnp.sum(yc * yc, axis=1, keepdims=True)
+        xy = jax.lax.dot_general(
+            x32, yc,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        d = jnp.maximum(x2 + y2.T - 2.0 * xy, 0.0)
+        cols = col0 + c * chunk + jnp.arange(chunk, dtype=jnp.int32)[
+            None, :
+        ]
+        dead = (rows == cols) | (cols >= hi)
+        d = jnp.where(dead, jnp.inf, d)
+        ci = jnp.where(dead, -1, jnp.broadcast_to(cols, d.shape))
+        cat_d = jnp.concatenate([bd, d], axis=1)
+        cat_i = jnp.concatenate([bi, ci], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+    return jax.lax.fori_loop(
+        0, steps, body,
+        (seed_d.astype(jnp.float32), seed_i.astype(jnp.int32)),
+    )

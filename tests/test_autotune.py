@@ -155,3 +155,46 @@ def test_minplus_border_is_a_seeded_op():
     assert autotune.divides(cfg, 16, 512, 512)
     plain = autotune.modeled_cost("minplus", 16, 512, 512, cfg)
     assert cost.hbm_bytes > plain.hbm_bytes
+
+
+# ------------------------------------------------------- fused kNN tiles --
+
+
+def test_knn_best_config_beats_default():
+    for m, n, d, k in ((256, 2048, 3, 10), (64, 500, 8, 7), (8, 8, 2, 3)):
+        cfg, cost = autotune.best_knn_config(m, n, d, k)
+        assert cost.vmem_bytes <= autotune.VMEM_BUDGET
+        dflt = autotune.KnnConfig(
+            min(autotune.KNN_DEFAULT.bm, m), min(autotune.KNN_DEFAULT.bn, n)
+        )
+        dcost = autotune.knn_cost(m, n, d, k, dflt)
+        assert cost.time_s <= dcost.time_s * (1.0 + 1e-9), (m, n, d, k, cfg)
+
+
+def test_knn_env_tile_override(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_KNN_TILES, "64,128")
+    assert autotune.knn_config(256, 2048, 3, 10) == autotune.KnnConfig(
+        64, 128
+    )
+    monkeypatch.setenv(autotune.ENV_KNN_TILES, "64")
+    with pytest.raises(ValueError, match="expected 'bm,bn'"):
+        autotune.knn_config(256, 2048, 3, 10)
+    monkeypatch.setenv(autotune.ENV_KNN_TILES, "64,0")
+    with pytest.raises(ValueError, match="tiles must be >= 1"):
+        autotune.knn_config(256, 2048, 3, 10)
+
+
+def test_knn_env_autotune_disable(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_KNN_AUTOTUNE, "0")
+    assert autotune.knn_config(256, 2048, 3, 10) == autotune.KnnConfig(
+        min(autotune.KNN_DEFAULT.bm, 256), min(autotune.KNN_DEFAULT.bn, 2048)
+    )
+    # clamped to the problem when it is smaller than the default tiles
+    assert autotune.knn_config(8, 16, 2, 3) == autotune.KnnConfig(8, 16)
+
+
+def test_pairwise_tiles_divide():
+    for m, n, d in ((100, 52, 3), (97, 31, 7), (512, 512, 784), (1, 1, 1)):
+        t = autotune.pairwise_tiles(m, n, d)
+        assert m % t["bm"] == 0 and n % t["bn"] == 0 and d % t["bd"] == 0
+        assert max(t.values()) <= 512

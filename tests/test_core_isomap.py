@@ -49,6 +49,18 @@ def test_knn_block_size_invariance(roll):
     np.testing.assert_array_equal(i64, i256)
 
 
+def test_knn_blocked_fused_matches_materializing(roll):
+    """The fused distance+merge path is bit-identical to the old
+    compute-tile-then-top_k composition, including a block that does not
+    divide n (the padded-rows path on both sides)."""
+    x, _ = roll
+    for block in (64, 100, 512):
+        df, fi = knn.knn_blocked(x, k=10, block=block)
+        dm, mi = knn.knn_blocked_materializing(x, k=10, block=block)
+        np.testing.assert_array_equal(np.asarray(df), np.asarray(dm))
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(mi))
+
+
 def test_graph_matches_oracle(roll, oracle):
     x, _ = roll
     d, i = knn.knn_blocked(x, k=10, block=128)

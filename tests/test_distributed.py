@@ -27,6 +27,14 @@ d_r, i_r = knn.knn_ring(xs, k=10, mesh=mesh)
 np.testing.assert_allclose(np.sort(d_r, 1), np.sort(d_l, 1), rtol=1e-3, atol=1e-4)
 print("OK ring-knn")
 
+# row counts that do not divide the mesh: pad + strip, bit-exact vs the
+# blocked single-device path (500 % 4 != 0)
+d_nl, i_nl = knn.knn_blocked(x[:500], k=10, block=500)
+d_nr, i_nr = knn.knn_ring(x[:500], k=10, mesh=mesh, feat_axis=None)
+np.testing.assert_array_equal(np.asarray(d_nr), np.asarray(d_nl))
+np.testing.assert_array_equal(np.asarray(i_nr), np.asarray(i_nl))
+print("OK ring-knn-nondividing")
+
 g = graph.knn_to_graph(d_l, i_l, n=n)
 a_local = apsp.apsp_blocked(g, block=128)
 gs = jax.device_put(np.asarray(g), NamedSharding(mesh, P("data", "model")))

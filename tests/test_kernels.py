@@ -13,6 +13,7 @@ from repro.kernels.minplus_panel import (
     minplus_panel_row as mpr_pallas,
 )
 from repro.kernels.floyd_warshall import floyd_warshall as fw_pallas
+from repro.kernels.knn_topk import PAD_IDX
 from repro.kernels.pairwise_dist import pairwise_sq_dists as pd_pallas
 
 
@@ -237,3 +238,191 @@ def test_ops_mode_dispatch(rng):
         )
     with pytest.raises(ValueError):
         ops.minplus(a, b, mode="bogus")
+
+
+def test_pairwise_auto_shrinks_tiles(rng):
+    """Shapes the static tile defaults do not divide auto-shrink to a
+    legal tiling instead of crashing on the kernel's divisibility
+    assert — including through the pallas (interpret) path."""
+    x = rng.normal(size=(100, 3)).astype(np.float32)
+    y = rng.normal(size=(52, 3)).astype(np.float32)
+    want = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    for mode in ("auto", "ref", "pallas"):
+        got = ops.pairwise_sq_dists(x, y, mode=mode)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_pairwise_tile_override_validation(rng):
+    """Explicit non-dividing tiles raise a clear ValueError naming the
+    shapes and tiles, ops.py style, instead of a raw kernel assert."""
+    x = rng.normal(size=(64, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match="bm=48 does not divide m=64"):
+        ops.pairwise_sq_dists(x, x, bm=48)
+    with pytest.raises(ValueError, match="bd=6 does not divide D=8"):
+        ops.pairwise_sq_dists(x, x, bd=6)
+    with pytest.raises(ValueError, match="unknown tile kwargs"):
+        ops.pairwise_sq_dists(x, x, bk=8)
+    with pytest.raises(ValueError, match="must be a positive int"):
+        ops.pairwise_sq_dists(x, x, bn=0)
+    with pytest.raises(ValueError, match="feature dims differ"):
+        ops.pairwise_sq_dists(x, x[:, :4])
+    # valid overrides still go through (clamped like the kernels clamp)
+    out = ops.pairwise_sq_dists(x, x, bm=128, bn=32, bd=4)
+    want = ((np.asarray(x)[:, None, :] - np.asarray(x)[None, :, :]) ** 2
+            ).sum(-1)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------- fused kNN top-k --
+
+
+def _brute_knn(x, y, k, row0=0, col0=0, n_valid=None):
+    """Brute-force (distance, column)-ranked top-k with first-wins ties:
+    the independent witness both the kernel and the oracle must match.
+    Distances use the kernel's own f32 x2 + y2 - 2<x,y> form so that
+    near-ties order identically (the first-wins rule is only meaningful
+    on bitwise-equal values)."""
+    x = x.astype(np.float32)
+    y = y.astype(np.float32)
+    x2 = (x * x).sum(1, keepdims=True)
+    y2 = (y * y).sum(1, keepdims=True)
+    d = np.maximum(x2 + y2.T - 2.0 * (x @ y.T), 0.0).astype(np.float32)
+    rows = row0 + np.arange(x.shape[0])[:, None]
+    cols = col0 + np.arange(y.shape[0])[None, :]
+    hi = col0 + y.shape[0] if n_valid is None else min(
+        col0 + y.shape[0], n_valid
+    )
+    dead = (rows == cols) | (cols >= hi)
+    d = np.where(dead, np.inf, d)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_i = np.where(
+        np.isfinite(out_d), (col0 + order).astype(np.int32), PAD_IDX
+    )
+    return out_d.astype(np.float32), out_i.astype(np.int32)
+
+
+def _empty_seed(m, k):
+    return (
+        jnp.full((m, k), jnp.inf, jnp.float32),
+        jnp.full((m, k), PAD_IDX, jnp.int32),
+    )
+
+
+@pytest.mark.parametrize(
+    "m,n,d,k,bm,bn",
+    [
+        (32, 64, 3, 5, 32, 64),
+        (64, 64, 8, 10, 16, 16),
+        (48, 100, 4, 7, 32, 64),   # bn does not divide n: wrapper pads
+        (100, 52, 6, 9, 64, 32),   # neither dim divides
+        (8, 8, 2, 3, 8, 8),
+    ],
+)
+def test_knn_topk_matches_oracle_and_brute(m, n, d, k, bm, bn, rng):
+    """Kernel (interpret) vs chunked oracle vs independent brute force:
+    bit-identical values AND indices across tilings, including tilings
+    that do not divide the problem."""
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    y = rng.normal(size=(n, d)).astype(np.float32)
+    sd, si = _empty_seed(m, k)
+    got_d, got_i = ops.knn_topk(x, y, sd, si, mode="pallas", bm=bm, bn=bn)
+    ref_d, ref_i = ops.knn_topk(x, y, sd, si, mode="ref", bn=bn)
+    assert np.array_equal(np.asarray(got_d), np.asarray(ref_d))
+    assert np.array_equal(np.asarray(got_i), np.asarray(ref_i))
+    want_d, want_i = _brute_knn(x, y, k)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(got_i), want_i)
+
+
+def test_knn_topk_tie_breaking_on_duplicates(rng):
+    """Duplicate points force exact distance ties; the first-wins rule
+    (lower column index) must hold bit for bit on every tiling and in
+    the oracle."""
+    base = rng.normal(size=(16, 4)).astype(np.float32)
+    y = np.concatenate([base, base, base])  # every row exists 3x
+    x = base.copy()
+    m, k = x.shape[0], 6
+    sd, si = _empty_seed(m, k)
+    outs = []
+    for bm, bn in ((8, 16), (16, 48), (4, 12)):
+        od, oi = ops.knn_topk(x, y, sd, si, mode="pallas", bm=bm, bn=bn)
+        outs.append((np.asarray(od), np.asarray(oi)))
+    rd, ri = ops.knn_topk(x, y, sd, si, mode="ref")
+    outs.append((np.asarray(rd), np.asarray(ri)))
+    want_d, want_i = _brute_knn(x, y, k)
+    for od, oi in outs:
+        assert np.array_equal(od, outs[0][0])
+        assert np.array_equal(oi, outs[0][1])
+    assert np.array_equal(outs[0][1], want_i)
+
+
+def test_knn_topk_k_exceeds_candidates(rng):
+    """k > live candidates: the tail must be (+inf, PAD_IDX) identically
+    in kernel and oracle (self-match masked, so n-1 live per row)."""
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    k = 12  # > n - 1 = 7 live candidates
+    sd, si = _empty_seed(8, k)
+    for mode in ("pallas", "ref"):
+        od, oi = ops.knn_topk(x, x, sd, si, mode=mode, bm=8, bn=8)
+        od, oi = np.asarray(od), np.asarray(oi)
+        assert np.isfinite(od[:, :7]).all()
+        assert (od[:, 7:] == np.inf).all()
+        assert (oi[:, 7:] == PAD_IDX).all()
+
+
+def test_knn_topk_padded_columns_all_dead(rng):
+    """n_valid masking: columns at or beyond the global bound are dead;
+    with n_valid <= col0 every lane is dead and rows come back all
+    (+inf, PAD_IDX)."""
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    y = rng.normal(size=(16, 3)).astype(np.float32)
+    sd, si = _empty_seed(8, 4)
+    for mode in ("pallas", "ref"):
+        od, oi = ops.knn_topk(
+            x, y, sd, si, col0=100, n_valid=100, mode=mode, bm=8, bn=16
+        )
+        assert (np.asarray(od) == np.inf).all()
+        assert (np.asarray(oi) == PAD_IDX).all()
+    # partial masking agrees with brute force on the live prefix
+    for mode in ("pallas", "ref"):
+        od, oi = ops.knn_topk(
+            x, y, sd, si, n_valid=9, mode=mode, bm=8, bn=16
+        )
+        want_d, want_i = _brute_knn(x, y, 4, n_valid=9)
+        np.testing.assert_allclose(od, want_d, rtol=1e-5, atol=1e-5)
+        assert np.array_equal(np.asarray(oi), want_i)
+
+
+def test_knn_topk_seed_chaining_equals_one_shot(rng):
+    """Folding the columns in two seeded calls == one call over all
+    columns, bit for bit — the prefix-stability that makes the kernel
+    composable across column tiles and ring steps."""
+    x = rng.normal(size=(16, 5)).astype(np.float32)
+    y = rng.normal(size=(48, 5)).astype(np.float32)
+    k = 6
+    sd, si = _empty_seed(16, k)
+    for mode in ("pallas", "ref"):
+        one_d, one_i = ops.knn_topk(x, y, sd, si, mode=mode, bm=16, bn=16)
+        ad, ai = ops.knn_topk(x, y[:32], sd, si, mode=mode, bm=16, bn=16)
+        bd, bi = ops.knn_topk(
+            x, y[32:], ad, ai, col0=32, mode=mode, bm=16, bn=16
+        )
+        assert np.array_equal(np.asarray(one_d), np.asarray(bd))
+        assert np.array_equal(np.asarray(one_i), np.asarray(bi))
+
+
+def test_knn_topk_validation(rng):
+    x = rng.normal(size=(16, 4)).astype(np.float32)
+    y = rng.normal(size=(16, 5)).astype(np.float32)
+    sd, si = _empty_seed(16, 3)
+    with pytest.raises(ValueError, match="feature dims differ"):
+        ops.knn_topk(x, y, sd, si)
+    with pytest.raises(ValueError, match="must be \\(m=16, k\\)"):
+        ops.knn_topk(x, x, sd[:8], si[:8])
+    with pytest.raises(ValueError, match="must match seed_d"):
+        ops.knn_topk(x, x, sd, si[:, :2])
+    with pytest.raises(ValueError, match="unknown tile kwargs"):
+        ops.knn_topk(x, x, sd, si, bk=8)
+    with pytest.raises(ValueError, match="must be a positive int"):
+        ops.knn_topk(x, x, sd, si, bm=-2)

@@ -183,6 +183,61 @@ def test_csr_graph_matches_dense_graph():
     np.testing.assert_array_equal(rebuilt, dense)
 
 
+def test_csr_graph_hub_overflow_doubles_width():
+    """A star hub: every row lists node 0 (k=1), so the hub's
+    symmetrized degree is n-1, far past the 2k starting cap — the
+    device build must widen until the hub fits, losing no edge."""
+    n = 40
+    idx = np.zeros((n, 1), np.int32)
+    idx[0, 0] = 1  # node 0's own neighbour (no self-lane in kNN lists)
+    d = np.ones((n, 1), np.float32)
+    nbr, w = graph.knn_to_padded_csr(jnp.asarray(d), jnp.asarray(idx), n=n)
+    w_np, nbr_np = np.asarray(w), np.asarray(nbr)
+    live0 = np.isfinite(w_np[0])
+    assert int(live0.sum()) == n - 1  # the hub kept every spoke
+    assert set(nbr_np[0, live0]) == set(range(1, n))
+    # spokes still have exactly one live lane each (to the hub)
+    for r in range(1, n):
+        fin = np.isfinite(w_np[r])
+        assert set(nbr_np[r, fin]) <= {0, 1}
+
+
+def test_csr_graph_explicit_deg_pins_width():
+    """An explicit deg pins the row width (no overflow retry): edges
+    past the cap are dropped, padded lanes stay (self, +inf)."""
+    n = 16
+    idx = np.zeros((n, 1), np.int32)
+    idx[0, 0] = 1
+    d = np.ones((n, 1), np.float32)
+    nbr, w = graph.knn_to_padded_csr(
+        jnp.asarray(d), jnp.asarray(idx), n=n, deg=4
+    )
+    assert nbr.shape == (n, 4) and w.shape == (n, 4)
+    assert int(np.isfinite(np.asarray(w)[0]).sum()) == 4  # truncated hub
+
+
+def test_csr_graph_ignores_knn_pad_lanes():
+    """(+inf, -1) kNN tail lanes (k > live neighbours) must not become
+    edges: the build from padded lists equals the build from the same
+    lists with the pad columns sliced off."""
+    from repro.core import knn
+
+    n, k = 24, 6
+    x, _ = euler_isometric_swiss_roll(n, seed=5)
+    x = jnp.asarray(x)
+    d, i = knn.knn_blocked(x, k=k, block=n)
+    pad_d = jnp.concatenate(
+        [d, jnp.full((n, 2), jnp.inf, jnp.float32)], axis=1
+    )
+    pad_i = jnp.concatenate(
+        [i, jnp.full((n, 2), -1, jnp.int32)], axis=1
+    )
+    nbr_a, w_a = graph.knn_to_padded_csr(d, i, n=n)
+    nbr_b, w_b = graph.knn_to_padded_csr(pad_d, pad_i, n=n, deg=nbr_a.shape[1])
+    np.testing.assert_array_equal(np.asarray(nbr_a), np.asarray(nbr_b))
+    np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_b))
+
+
 # ----------------------------------------------------- landmark selection --
 
 
