@@ -69,6 +69,14 @@ def build_parser() -> argparse.ArgumentParser:
                     "the oracle assertions compare against); sparse: "
                     "landmark-panel chain under a dense-refusing "
                     "REPRO_DENSE_BYTES budget")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run the replication smoke with this many "
+                    "log-shipped reader replicas instead of the sweep")
+    ap.add_argument("--read-delay-ms", type=float, default=20.0,
+                    help="per-flush sleep injected into each replica's "
+                    "mapper for the replication smoke: models device "
+                    "latency (sleeps release the GIL), so throughput "
+                    "scaling with replica count is measurable on one CPU")
     return ap
 
 
@@ -403,6 +411,162 @@ def run_absorb_smoke_sparse(args) -> dict:
     return row
 
 
+class _DelayedMapper:
+    """Mapper wrapper sleeping `delay_s` per mapped batch: a stand-in for
+    device latency (time.sleep releases the GIL), so replica-count
+    scaling is measurable on a single CPU.  Everything else (absorb,
+    apply_log_entry, version, ...) delegates to the wrapped mapper."""
+
+    def __init__(self, mapper, delay_s: float):
+        self._mapper = mapper
+        self._delay_s = delay_s
+
+    def __call__(self, x):
+        time.sleep(self._delay_s)
+        return self._mapper(x)
+
+    def __getattr__(self, name):
+        return getattr(self._mapper, name)
+
+
+def run_replication_smoke(args) -> dict:
+    """Writer + N log-shipped reader replicas behind the consistent-hash
+    router (--replicas N).
+
+    Asserted, not just reported:
+
+    * read throughput scales with replica count: the same closed-loop
+      read wave through N >= 2 replicas sustains > 1.3x the single-replica
+      points/s (each replica's mapper carries a --read-delay-ms sleep
+      standing in for device latency, so the comparison is meaningful on
+      one CPU);
+    * reads keep completing while a replica is killed and restarted
+      mid-wave - every submitted future resolves;
+    * absorbs remain single-writer: they flow through the writer's
+      update log, and after :meth:`ReplicatedMapperFleet.sync` every
+      replica's geodesics/embedding are bit-identical to the writer's
+      (including the replica that was restarted mid-run, which converged
+      by replay alone).
+    """
+    import numpy as np
+
+    from repro.core.streaming import LandmarkStreamingMapper, StreamingMapper
+    from repro.core.update import UpdateConfig
+    from repro.launch.replication import ReplicatedMapperFleet
+    from run import write_bench_json
+
+    assert args.replicas >= 2, "--replicas must be >= 2 for the smoke"
+    x_base, x_stream, backend, art, n_base, n_stream = _fit(args)
+    n_absorb = 8
+    x_absorb, x_query = x_stream[:n_absorb], x_stream[n_absorb:]
+    delay_s = args.read_delay_ms / 1e3
+
+    mapper_cls = (
+        LandmarkStreamingMapper if getattr(args, "regime", "dense") == "sparse"
+        else StreamingMapper
+    )
+    art_host = {a: np.asarray(art[a]) for a in mapper_cls.SERVING_ARTIFACTS}
+
+    def make_mapper(update_cfg):
+        return _DelayedMapper(
+            mapper_cls.from_artifacts(
+                art_host, k=args.k, batch=args.max_batch, backend=backend,
+                update=update_cfg,
+            ),
+            delay_s,
+        )
+
+    def fleet_for(log_dir, n_replicas):
+        return ReplicatedMapperFleet(
+            make_mapper, log_dir,
+            replicas=n_replicas, update=UpdateConfig(),
+            max_batch=args.max_batch, max_latency_ms=args.max_latency_ms,
+            pipeline_depth=1,   # scaling must come from replicas alone
+        )
+
+    def read_wave(fleet, repeats=4):
+        t0 = time.perf_counter()
+        futures = [
+            fleet.submit(x_query[i % x_query.shape[0]])
+            for i in range(repeats * x_query.shape[0])
+        ]
+        for f in futures:
+            assert f.result(timeout=120) is not None
+        wall = time.perf_counter() - t0
+        return len(futures) / wall
+
+    import tempfile
+
+    # compile the fixed serving shape once, outside the timed waves (the
+    # services pad every coalesced batch to max_batch rows)
+    make_mapper(UpdateConfig())(
+        np.zeros((args.max_batch, x_query.shape[1]), np.float32)
+    )
+
+    # throughput: 1 replica vs N replicas over the identical read wave
+    with fleet_for(tempfile.mkdtemp(prefix="repl-1-"), 1) as fleet:
+        pts_s_1 = read_wave(fleet)
+    with fleet_for(tempfile.mkdtemp(prefix="repl-n-"), args.replicas) as fleet:
+        pts_s_n = read_wave(fleet)
+    scale = pts_s_n / pts_s_1
+    assert scale > 1.3, (
+        f"{args.replicas} replicas sustained {pts_s_n:.0f} pts/s vs "
+        f"{pts_s_1:.0f} with one ({scale:.2f}x) - read throughput is not "
+        "scaling with replica count"
+    )
+
+    # fault injection under live absorbs: kill + restart a replica
+    # mid-wave; every read resolves, and after sync every replica is
+    # bit-identical to the writer
+    log_dir = tempfile.mkdtemp(prefix="repl-fault-")
+    with fleet_for(log_dir, args.replicas) as fleet:
+        futures = [
+            fleet.submit(x_query[i % x_query.shape[0]])
+            for i in range(x_query.shape[0])
+        ]
+        victim = next(iter(fleet.replicas))
+        fleet.kill_replica(victim)
+        futures += [
+            fleet.submit(x_query[i % x_query.shape[0]])
+            for i in range(x_query.shape[0])
+        ]
+        report = fleet.absorb(x_absorb)
+        fleet.restart_replica(victim)
+        for f in futures:
+            assert f.result(timeout=120) is not None
+        assert fleet.sync(timeout=120), "replicas failed to catch up"
+        writer = fleet.writer_mapper
+        state_key = "panel" if args.regime == "sparse" else "geodesics"
+        for name, replica in fleet.replicas.items():
+            m = replica.mapper
+            assert m.version == writer.version, (name, m.version)
+            assert np.array_equal(
+                np.asarray(getattr(m, state_key)),
+                np.asarray(getattr(writer, state_key)),
+            ), f"replica {name} diverged from the writer ({state_key})"
+            assert np.array_equal(
+                np.asarray(m.embedding), np.asarray(writer.embedding)
+            ), f"replica {name} diverged from the writer (embedding)"
+        lag = max(s["lag_steps"] for s in fleet.stats()["replicas"])
+
+    row = {
+        "backend": args.backend,
+        "replicas": args.replicas,
+        "pts_s_1_replica": pts_s_1,
+        "pts_s_n_replicas": pts_s_n,
+        "scale": scale,
+        "absorbed": report.absorbed,
+        "post_sync_lag_steps": lag,
+    }
+    print("backend,replicas,pts_s_1_replica,pts_s_n_replicas,scale,"
+          "absorbed,post_sync_lag_steps")
+    print(",".join(str(row[c]) for c in row))
+    write_bench_json([
+        {"name": f"serving_replication_{args.backend}", **row}
+    ])
+    return row
+
+
 def run(args) -> list[dict]:
     from repro.core.streaming import LandmarkStreamingMapper, StreamingMapper
     from repro.launch.serving import BatchedMapperService
@@ -468,6 +632,8 @@ def main(argv=None):
     if args.backend == "mesh" and "XLA_FLAGS" not in os.environ:
         # must happen before any jax import in this process
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    if args.replicas:
+        return run_replication_smoke(args)
     if args.absorb:
         if args.regime == "sparse":
             return run_absorb_smoke_sparse(args)

@@ -29,6 +29,7 @@ engine mutates it via :meth:`ArtifactStore.put` / :meth:`ArtifactStore.prune`.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections.abc import Mapping
 from typing import Any, Iterator, Sequence
 
@@ -163,10 +164,16 @@ class VersionedArtifacts:
     the pointer in one reference assignment - writers never mutate a
     published generation, so a reader can never observe a half-updated
     ``geodesics``/``embedding`` pair.
+
+    Readers stay lock-free; the only synchronization is a condition
+    variable the (single) writer notifies on publish so that
+    :meth:`await_version` can block instead of spinning - the replication
+    layer and its tests use it to wait for a replica's cutover.
     """
 
     def __init__(self, base: Mapping, *, version: int = 0) -> None:
         self._current = ArtifactVersion(version, dict(base))
+        self._publish_cond = threading.Condition()
 
     @property
     def current(self) -> ArtifactVersion:
@@ -183,8 +190,20 @@ class VersionedArtifacts:
         assignment; in-flight readers keep the generation they captured."""
         cur = self._current
         nxt = ArtifactVersion(cur.version + 1, {**cur.artifacts, **updates})
-        self._current = nxt
+        with self._publish_cond:
+            self._current = nxt
+            self._publish_cond.notify_all()
         return nxt
+
+    def await_version(self, version: int, timeout: float | None = None
+                      ) -> bool:
+        """Block until a generation >= `version` is published (True), or
+        `timeout` seconds pass (False).  Purely a waiter's convenience:
+        readers that just want the newest snapshot read ``current``."""
+        with self._publish_cond:
+            return self._publish_cond.wait_for(
+                lambda: self._current.version >= version, timeout
+            )
 
 
 # ------------------------------------------------- placement spec codec ----

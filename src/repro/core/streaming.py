@@ -387,6 +387,13 @@ class StreamingMapper:
         """Serving version: 0 at fit, +1 per absorbed flush group."""
         return self._versions.version
 
+    def await_version(self, version: int, timeout: float | None = None
+                      ) -> bool:
+        """Block until a serving generation >= `version` is published
+        (True) or `timeout` passes (False) - replication tests use it to
+        wait for a replica's cutover without polling."""
+        return self._versions.await_version(version, timeout)
+
     @property
     def x_base(self):
         return self._versions.current["x"]
@@ -557,6 +564,26 @@ class StreamingMapper:
                     self, self._update_cfg or UpdateConfig()
                 )
             return self._updater.absorb(x_new)
+
+    def apply_log_entry(self, x, flushes, gen=None) -> None:
+        """Apply one decoded update-log entry (the replication unit): the
+        entry's accepted points join any previously re-buffered tail and
+        its recorded flush groups are expanded verbatim.  Feeding a
+        generation's entries one call at a time is bit-identical to one
+        whole-log :meth:`replay_update_log` - flush groups consume the
+        cumulative accepted stream front-first, and
+        :meth:`~repro.core.update.GeodesicUpdater.replay` prepends the
+        buffered tail.  Used by log-tailing reader replicas
+        (:mod:`repro.launch.replication`); identity validation is the
+        tailer's job (it sees the entry manifests)."""
+        from repro.core.update import UpdateConfig
+
+        with self._absorb_lock:
+            if self._updater is None:
+                self._updater = self._updater_cls()(
+                    self, self._update_cfg or UpdateConfig()
+                )
+            self._updater.replay(x, flushes, gen=gen)
 
     def replay_update_log(self, checkpoint_dir: str) -> int:
         """Replay the update log persisted under `checkpoint_dir` (see

@@ -83,6 +83,93 @@ UPDATE_LOG_KEY = "update_log"
 UPDATE_LOG_DIR = "updates"
 
 
+class TornUpdateLogWarning(UserWarning):
+    """A torn/truncated update-log entry was detected and skipped.
+
+    Checkpoint saves are atomic (tmp dir + ``os.replace``), so a torn
+    entry means the filesystem itself lost the write (power cut,
+    truncated copy, bad disk).  Replaying bytes like that as a flush
+    group would silently corrupt the manifold, so the log readers stop
+    at the first torn entry instead: replay covers the longest complete
+    prefix of the generation, bit-identical to the writer's state at
+    that log position, and this warning names the torn step."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LogEntry:
+    """One complete, decoded update-log entry (replication unit)."""
+
+    step: int              # monotonic log step
+    gen: int               # generation id (first step of the chain)
+    x: np.ndarray          # (count, D) points accepted by the absorb call
+    flushes: list          # flush-group sizes the call triggered
+    manifest: dict         # full manifest (identity params etc.)
+
+
+def read_log_entries(
+    log_dir: str, *, after_step: int = 0, warn: bool = True
+):
+    """Decode every complete update-log entry in ``log_dir`` (the
+    ``<checkpoint_dir>/updates`` directory itself) with step >
+    `after_step`, in step order: the incremental read the replication
+    tailer polls (and :meth:`GeodesicUpdater.find_log`'s backbone).
+
+    Returns ``(entries, torn_step)``: ``entries`` is a list of
+    :class:`LogEntry`; ``torn_step`` is the step number of the first
+    torn/unreadable entry (manifest unparseable, arrays truncated or
+    missing), or None.  Reading STOPS at a torn entry - later entries'
+    flush groups consume the accepted stream cumulatively, so replaying
+    past a hole would apply the wrong points - and a
+    :class:`TornUpdateLogWarning` is emitted when `warn`.  Entries that
+    are not update-log entries at all (foreign checkpoints in a shared
+    directory) are skipped without stopping the scan.
+    """
+    import warnings
+
+    from repro.checkpoint import CheckpointManager
+
+    if not os.path.isdir(log_dir):
+        return [], None
+    mgr = CheckpointManager(log_dir)
+    entries: list[LogEntry] = []
+    torn_step = None
+    for step in mgr.all_steps():
+        if step <= after_step:
+            continue
+        try:
+            manifest = mgr.read_manifest(step)
+        except (OSError, ValueError):
+            torn_step = step          # unreadable manifest: torn entry
+            break
+        if not manifest.get(UPDATE_LOG_KEY):
+            continue                  # foreign checkpoint, not a log hole
+        try:
+            data = mgr.restore_flat(step)
+            x = np.asarray(data["x"], dtype=np.float32)
+        except Exception:             # truncated npz, missing arrays, ...
+            torn_step = step
+            break
+        entries.append(LogEntry(
+            step=step,
+            gen=int(manifest.get("gen", step)),
+            x=x,
+            flushes=[int(s) for s in manifest.get("flushes", [])],
+            manifest=manifest,
+        ))
+    if torn_step is not None and warn:
+        warnings.warn(
+            f"update log under {log_dir!r}: entry step {torn_step} is "
+            "torn/unreadable (partial write?); replaying the complete "
+            f"prefix only ({len(entries)} newer entr"
+            f"{'y' if len(entries) == 1 else 'ies'} read, entries past "
+            "the torn step are dropped - they would consume the wrong "
+            "points)",
+            TornUpdateLogWarning,
+            stacklevel=2,
+        )
+    return entries, torn_step
+
+
 # ------------------------------------------------------------ edge build ----
 
 
@@ -488,6 +575,14 @@ class GeodesicUpdater:
 
     # ---------------------------------------------------------- durability --
 
+    @property
+    def last_log_step(self) -> int:
+        """Step number of the newest entry this writer has durably
+        logged (0 before the first append) - the position a replica must
+        reach for :meth:`ReplicatedMapperFleet.sync` to consider it
+        caught up."""
+        return self._next_step - 1
+
     def _save_log(self, new_points: np.ndarray, flush_delta: list[int]):
         """Append one update-log entry: the points accepted by THIS call
         plus the flush sizes it triggered.
@@ -535,9 +630,20 @@ class GeodesicUpdater:
         unflushed tail is re-buffered - the restored server reaches the
         same version chain deterministically.  ``gen`` adopts the
         restored generation so later absorbs append to the same chain.
+
+        Incremental: points already buffered (by an earlier replay
+        call's unflushed tail) are consumed FIRST - flush groups eat the
+        cumulative accepted stream from the front, so a log-tailing
+        replica can feed entries one at a time and reach bit-identically
+        the same state as one whole-log replay (whole-log restore is the
+        empty-buffer special case).
         """
         self._gen = gen if gen is not None else self._gen
         x_all = np.asarray(x_all, dtype=np.float32)
+        if self._pending:
+            x_all = np.concatenate([*self._pending, x_all], axis=0)
+            self._pending = []
+            self._pending_count = 0
         off = 0
         for sz in flushes:
             group = x_all[off:off + sz]
@@ -563,40 +669,19 @@ class GeodesicUpdater:
         checkpoint directory; returns (x_all, flushes, manifest) or
         None - x_all/flushes are the concatenated entries of the
         generation in step order, manifest is the newest entry's (its
-        identity params apply to the whole generation).  Unreadable or
-        foreign steps are skipped - same tolerant-scan contract as the
-        serving restore path."""
-        from repro.checkpoint import CheckpointManager
-
-        log_dir = os.path.join(base_dir, UPDATE_LOG_DIR)
-        if not os.path.isdir(log_dir):
-            return None
-        mgr = CheckpointManager(log_dir)
-        entries = []                     # (step, manifest) of valid entries
-        for step in mgr.all_steps():
-            try:
-                manifest = mgr.read_manifest(step)
-            except (OSError, ValueError):
-                continue
-            if manifest.get(UPDATE_LOG_KEY):
-                entries.append((step, manifest))
+        identity params apply to the whole generation).  Foreign steps
+        (pipeline checkpoints sharing the directory) are skipped; a
+        torn/truncated entry stops the scan (with a
+        :class:`TornUpdateLogWarning`), so replay covers the longest
+        complete prefix instead of consuming the wrong points."""
+        entries, _ = read_log_entries(os.path.join(base_dir, UPDATE_LOG_DIR))
         if not entries:
             return None
-        newest_step, newest = entries[-1]
-        gen = newest.get("gen", newest_step)
-        xs, flushes = [], []
-        for step, manifest in entries:
-            if manifest.get("gen", step) != gen:
-                continue
-            try:
-                data = mgr.restore_flat(step)
-            except (OSError, KeyError):
-                return None   # a chain entry is gone: the log is unusable
-            if "x" not in data:
-                return None
-            xs.append(data["x"])
-            flushes.extend(int(s) for s in manifest.get("flushes", []))
-        return np.concatenate(xs, axis=0), flushes, newest
+        newest = entries[-1]
+        chain = [e for e in entries if e.gen == newest.gen]
+        x_all = np.concatenate([e.x for e in chain], axis=0)
+        flushes = [s for e in chain for s in e.flushes]
+        return x_all, flushes, newest.manifest
 
 
 class LandmarkGeodesicUpdater(GeodesicUpdater):

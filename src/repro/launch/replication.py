@@ -1,0 +1,475 @@
+"""Replicated serving fleet: one writer, N log-shipped reader replicas.
+
+The paper's end goal is serving exact Isomap at scales "orders of
+magnitude larger than what is currently possible"; a single
+:class:`~repro.launch.serving.BatchedMapperService` caps read throughput
+at one process.  The generation-chained update log
+(:mod:`repro.core.update`) already makes any absorbed snapshot
+reproducible by replay, so it is promoted here into a replication
+protocol:
+
+* the **writer** owns the only :class:`~repro.core.update.GeodesicUpdater`
+  with a ``log_dir``: every absorb gates, expands, publishes, and appends
+  one durable log entry (O(batch) bytes - points + flush sizes, never the
+  grown O(n^2) state);
+* each **reader replica** owns a full mapper on its own backend and
+  *tails* the log (:func:`repro.core.update.read_log_entries` above its
+  last applied step), applying each entry via
+  :meth:`~repro.core.streaming.StreamingMapper.apply_log_entry` - the
+  same ``replay`` machinery as restart recovery, so a replica's state
+  after applying steps 1..s is bit-identical to the writer's published
+  state at log position s (CPU-deterministic expansion, identical
+  recorded flush grouping).  Cutover is the mapper's own
+  :class:`~repro.core.artifacts.VersionedArtifacts` publish: atomic under
+  live reads, never a mixed-generation snapshot;
+* a :class:`~repro.launch.router.ConsistentHashRouter` in front spreads
+  ``map`` requests across live replicas (stable hashing, replica
+  join/leave moves only ~1/N of keys) while **all absorbs route to the
+  writer** - single-writer exactness is what preserves the
+  Schoeneman-gate guarantees.
+
+Replication is asynchronous: a replica lags the writer by the entries it
+has not yet applied (``lag_steps`` in :meth:`ReplicatedMapperFleet.stats`,
+0 when caught up).  Reads served meanwhile come from the replica's older
+- but internally consistent - generation; :meth:`ReplicatedMapperFleet.sync`
+blocks until every live replica has caught up to the writer's last
+durable log step.
+
+Generations: a fresh writer starts a new log generation, shadowing stale
+entries in a reused directory.  A tailing replica that observes a newer
+generation resets itself (fresh mapper from the factory) and replays the
+new chain from its start - exactly what a restarted replica does, so
+crash recovery and generation cutover are one code path
+(fault-injected in ``tests/test_replication.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro.core.update import UpdateConfig, read_log_entries
+from repro.launch.router import ConsistentHashRouter
+from repro.launch.serving import BatchedMapperService
+
+
+class ReplicaDiverged(RuntimeError):
+    """A replica's tailer hit a log entry it must not apply (identity
+    params differ from its mapper's fit) - tailing stops rather than
+    serving a wrong manifold."""
+
+
+class _ReaderMapper:
+    """Swappable mapper front for a replica's service.
+
+    The service holds one stable callable while the tailer atomically
+    replaces the mapper underneath on generation reset (single reference
+    assignment, same discipline as the versioned artifacts).  The write
+    path is closed off: a replica absorb would fork the manifold away
+    from the log.
+    """
+
+    def __init__(self, mapper):
+        self._mapper = mapper
+
+    def swap(self, mapper):
+        self._mapper = mapper
+
+    @property
+    def mapper(self):
+        return self._mapper
+
+    def __call__(self, x):
+        return self._mapper(x)
+
+    def absorb(self, x):
+        raise RuntimeError(
+            "reader replicas are read-only: absorbs must go through the "
+            "fleet writer (ReplicatedMapperFleet.submit_absorb), which "
+            "owns the update log this replica is tailing"
+        )
+
+    def __getattr__(self, name):
+        return getattr(self._mapper, name)
+
+
+class ReaderReplica:
+    """One log-tailing reader: a full mapper + batched service + tailer
+    thread.
+
+    name: router node id (opaque; the fleet uses ``replica-i``).
+    mapper_factory: zero-arg callable building a fresh mapper from the
+    *base* (fit-time) artifacts with ``update.log_dir=None`` - called at
+    start and again on generation reset, so a replica can always rebuild
+    from scratch and catch up by replay.
+    log_dir: the writer's update-log directory (``<ckpt>/updates``).
+    poll_s: tailer poll interval.
+    Remaining knobs go to the replica's :class:`BatchedMapperService`
+    (``pipeline_depth`` defaults to 2: replicas exist for read
+    throughput, so a slow flush overlaps the next batch's coalescing).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        mapper_factory,
+        log_dir: str,
+        *,
+        poll_s: float = 0.02,
+        max_batch: int = 64,
+        max_latency_ms: float = 5.0,
+        pipeline_depth: int = 2,
+        **service_kwargs,
+    ):
+        self.name = name
+        self.mapper_factory = mapper_factory
+        self.log_dir = log_dir
+        self.poll_s = poll_s
+        self._front = _ReaderMapper(mapper_factory())
+        self.service = BatchedMapperService(
+            self._front,
+            max_batch=max_batch,
+            max_latency_ms=max_latency_ms,
+            pipeline_depth=pipeline_depth,
+            **service_kwargs,
+        )
+        self.applied_step = 0       # newest log step folded into the mapper
+        self.gen: int | None = None
+        self.error: Exception | None = None
+        self._tail_stop = threading.Event()
+        self._tailer: threading.Thread | None = None
+        self._applied_cond = threading.Condition()
+
+    # --------------------------------------------------------- lifecycle --
+
+    def start(self) -> "ReaderReplica":
+        self.service.start()
+        self._tail_stop.clear()
+        self._tailer = threading.Thread(
+            target=self._tail_loop, daemon=True,
+            name=f"tailer-{self.name}",
+        )
+        self._tailer.start()
+        return self
+
+    def stop(self):
+        """Graceful stop: tailer first (no new cutovers), then the
+        service (pending reads drain)."""
+        self._tail_stop.set()
+        if self._tailer is not None:
+            self._tailer.join()
+            self._tailer = None
+        self.service.stop()
+
+    def kill(self):
+        """Fault injection: stop serving *now* without draining state
+        bookkeeping - the restarted replica must rebuild from the base
+        artifacts and converge by replay alone."""
+        self.stop()
+
+    @property
+    def alive(self) -> bool:
+        return self._tailer is not None and self.error is None
+
+    # ------------------------------------------------------------ reads --
+
+    def submit(self, x):
+        return self.service.submit(x)
+
+    def map(self, x):
+        return self.service.map(x)
+
+    @property
+    def mapper(self):
+        return self._front.mapper
+
+    # ----------------------------------------------------------- tailing --
+
+    def _tail_loop(self):
+        while not self._tail_stop.is_set():
+            try:
+                self.poll()
+            except Exception as e:          # pragma: no cover - surfaced
+                self.error = e              # via stats()/await_applied
+                return
+            self._tail_stop.wait(self.poll_s)
+
+    def poll(self) -> int:
+        """One tailer iteration: read complete entries above the applied
+        step, adopt the newest generation (resetting to base artifacts if
+        it changed), apply the new chain entries in step order.  Returns
+        the number of entries applied.  Torn entries stop the read at the
+        complete prefix (the writer's durability guarantee is exactly
+        that prefix); the tailer simply retries past it next poll once
+        the writer has moved on."""
+        entries, _ = read_log_entries(
+            self.log_dir, after_step=self.applied_step, warn=False
+        )
+        if not entries:
+            return 0
+        newest_gen = max(e.gen for e in entries)
+        if self.gen is not None and newest_gen != self.gen:
+            # a fresh writer started a new chain: this replica's absorbed
+            # state belongs to the shadowed generation - rebuild from the
+            # base artifacts and replay the new chain (steps are
+            # monotonic, so the new chain sits entirely above
+            # applied_step already)
+            self._front.swap(self.mapper_factory())
+        chain = [e for e in entries if e.gen == newest_gen]
+        applied = 0
+        for e in chain:
+            self._check_identity(e.manifest)
+            self._front.mapper.apply_log_entry(e.x, e.flushes, gen=e.gen)
+            applied += 1
+        with self._applied_cond:
+            self.gen = newest_gen
+            # older-generation steps below the chain are permanently
+            # shadowed - skip them forever, not just this poll
+            self.applied_step = max(e.step for e in entries)
+            self._applied_cond.notify_all()
+        return applied
+
+    def _check_identity(self, manifest: dict):
+        mapper = self._front.mapper
+        log_k = manifest.get("k")
+        log_obj = manifest.get("objective")
+        if (log_k is not None and log_k != mapper.k) or (
+            log_obj is not None and log_obj != mapper.objective.name
+        ):
+            raise ReplicaDiverged(
+                f"replica {self.name!r} (k={mapper.k}, "
+                f"objective={mapper.objective.name!r}) cannot apply a log "
+                f"entry absorbed under k={log_k}, objective={log_obj!r}; "
+                "the fleet's mapper factory must match the writer's fit"
+            )
+
+    def await_applied(self, step: int, timeout: float | None = None) -> bool:
+        """Block until this replica has applied log step >= `step` (True)
+        or `timeout` passes (False); re-raises a tailer error."""
+        with self._applied_cond:
+            ok = self._applied_cond.wait_for(
+                lambda: self.applied_step >= step or self.error is not None,
+                timeout,
+            )
+        if self.error is not None:
+            raise self.error
+        return ok
+
+    def stats(self) -> dict:
+        s = self.service.stats()
+        s.update(
+            replica=self.name,
+            applied_step=self.applied_step,
+            gen=self.gen,
+            version=self._front.mapper.version,
+            alive=self.alive,
+        )
+        return s
+
+
+class ReplicatedMapperFleet:
+    """Writer + N reader replicas + consistent-hash router, in one front.
+
+    make_mapper: callable ``(update_cfg) -> mapper`` building a fresh
+    mapper from the base (fit-time) artifacts with the given
+    :class:`~repro.core.update.UpdateConfig` - the fleet calls it once
+    with ``log_dir`` set (the writer) and once per replica (start or
+    reset) with ``log_dir=None`` (replicas never append; they tail).
+    log_dir: the shared update-log directory (``<ckpt>/updates``).
+    replicas: initial replica count (join/leave later via
+    :meth:`add_replica` / :meth:`kill_replica` / :meth:`restart_replica`).
+    vnodes: router ring points per replica.
+    update: base UpdateConfig (threshold/multiple/...); its ``log_dir``
+    is overridden per role as above.
+    Remaining service knobs apply to writer and replicas alike.
+
+    Read path: ``map(x, key=...)`` routes by consistent hash over the
+    *live* replica set and blocks on that replica's batched service; with
+    no live replicas the writer serves reads itself (degraded but
+    available - the fault-injection tests read straight through a
+    replica restart).  Write path: ``submit_absorb`` always goes to the
+    writer's service (admission control and absorb-window scheduling
+    included).
+    """
+
+    def __init__(
+        self,
+        make_mapper,
+        log_dir: str,
+        *,
+        replicas: int = 2,
+        vnodes: int = 64,
+        update: UpdateConfig | None = None,
+        poll_s: float = 0.02,
+        max_batch: int = 64,
+        max_latency_ms: float = 5.0,
+        pipeline_depth: int = 2,
+        **service_kwargs,
+    ):
+        self.log_dir = log_dir
+        base_cfg = update if update is not None else UpdateConfig()
+        self._make_mapper = make_mapper
+        self._writer_cfg = dataclasses.replace(base_cfg, log_dir=log_dir)
+        self._replica_cfg = dataclasses.replace(base_cfg, log_dir=None)
+        self._svc_kwargs = dict(
+            max_batch=max_batch,
+            max_latency_ms=max_latency_ms,
+            **service_kwargs,
+        )
+        self.poll_s = poll_s
+        self.pipeline_depth = pipeline_depth
+        self.writer_mapper = make_mapper(self._writer_cfg)
+        self.writer = BatchedMapperService(
+            self.writer_mapper,
+            pipeline_depth=pipeline_depth,
+            **self._svc_kwargs,
+        )
+        self.router = ConsistentHashRouter(vnodes=vnodes)
+        self.replicas: dict[str, ReaderReplica] = {}
+        self._n_started = 0
+        self._initial_replicas = replicas
+        self._auto_key = itertools.count()
+
+    # --------------------------------------------------------- lifecycle --
+
+    def start(self) -> "ReplicatedMapperFleet":
+        self.writer.start()
+        for _ in range(self._initial_replicas):
+            self.add_replica()
+        return self
+
+    def stop(self):
+        for name in list(self.replicas):
+            replica = self.replicas.pop(name)
+            self.router.remove(name)
+            replica.stop()
+        self.writer.stop()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def _new_replica(self, name: str) -> ReaderReplica:
+        return ReaderReplica(
+            name,
+            lambda: self._make_mapper(self._replica_cfg),
+            self.log_dir,
+            poll_s=self.poll_s,
+            pipeline_depth=self.pipeline_depth,
+            **self._svc_kwargs,
+        )
+
+    def add_replica(self, name: str | None = None) -> ReaderReplica:
+        """Join a new reader: builds its mapper from the base artifacts,
+        starts tailing (it catches up by replaying the whole current
+        generation), and enters the router ring - only ~1/N of keys move
+        onto it."""
+        if name is None:
+            name = f"replica-{self._n_started}"
+        if name in self.replicas:
+            raise ValueError(f"replica {name!r} already in the fleet")
+        self._n_started += 1
+        replica = self._new_replica(name).start()
+        self.replicas[name] = replica
+        self.router.add(name)
+        return replica
+
+    def kill_replica(self, name: str) -> ReaderReplica:
+        """Fault injection / planned leave: the replica leaves the ring
+        first (its keys fall to their ring successors; every other key
+        keeps its replica), then stops serving."""
+        replica = self.replicas.pop(name)
+        self.router.remove(name)
+        replica.kill()
+        return replica
+
+    def restart_replica(self, name: str) -> ReaderReplica:
+        """Bring a previously killed replica back: a *fresh* mapper from
+        the base artifacts, converging with the writer by replaying the
+        log (nothing of the dead incarnation's state is reused)."""
+        if name in self.replicas:
+            raise ValueError(f"replica {name!r} is already running")
+        replica = self._new_replica(name).start()
+        self.replicas[name] = replica
+        self.router.add(name)
+        return replica
+
+    # ------------------------------------------------------------- reads --
+
+    def submit(self, x, key=None):
+        """Route one read to its replica (consistent hash on `key`;
+        unkeyed requests round-robin an internal counter, which the ring
+        then spreads ~uniformly).  Returns the replica service's Future.
+        With no live replicas the writer serves the read."""
+        if key is None:
+            key = next(self._auto_key)
+        try:
+            name = self.router.route(key)
+        except LookupError:
+            return self.writer.submit(x)
+        replica = self.replicas.get(name)
+        if replica is None:
+            # raced a concurrent kill: the ring update lands momentarily;
+            # meanwhile the writer serves the read (availability over
+            # affinity)
+            return self.writer.submit(x)
+        return replica.submit(x)
+
+    def map(self, x, key=None) -> np.ndarray:
+        return self.submit(x, key=key).result()
+
+    # ------------------------------------------------------------ writes --
+
+    def submit_absorb(self, x):
+        """All writes go to the single writer - its absorb gate, flush
+        grouping, and durable log append are the replication protocol's
+        source of truth."""
+        return self.writer.submit_absorb(x)
+
+    def absorb(self, x):
+        return self.submit_absorb(x).result()
+
+    # ---------------------------------------------------------- tracking --
+
+    @property
+    def writer_log_step(self) -> int:
+        """The writer's newest durable log step (0 before any absorb)."""
+        updater = getattr(self.writer_mapper, "_updater", None)
+        return updater.last_log_step if updater is not None else 0
+
+    def sync(self, timeout: float | None = 30.0) -> bool:
+        """Block until every live replica has applied the writer's last
+        durable log step; returns False on timeout."""
+        step = self.writer_log_step
+        deadline = (
+            time.monotonic() + timeout if timeout is not None else None
+        )
+        for replica in list(self.replicas.values()):
+            left = (
+                None if deadline is None
+                else max(0.0, deadline - time.monotonic())
+            )
+            if not replica.await_applied(step, timeout=left):
+                return False
+        return True
+
+    def stats(self) -> dict:
+        """Writer stats + per-replica stats, each annotated with its
+        replication lag in log steps behind the writer."""
+        step = self.writer_log_step
+        per_replica = []
+        for replica in self.replicas.values():
+            s = replica.stats()
+            s["lag_steps"] = max(0, step - replica.applied_step)
+            per_replica.append(s)
+        return {
+            "writer": self.writer.stats(),
+            "writer_log_step": step,
+            "replicas": per_replica,
+            "router_nodes": list(self.router.nodes),
+        }

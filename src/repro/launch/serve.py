@@ -119,6 +119,9 @@ def serve_manifold(
     regime: str = "auto",
     landmarks: int = 0,
     objective: str = "spectral",
+    replicas: int = 0,
+    router_vnodes: int = 64,
+    pipeline_depth: int = 2,
     seed: int = 0,
 ):
     """Fit the staged Isomap pipeline on a base batch, then serve streamed
@@ -142,6 +145,14 @@ def serve_manifold(
     absorb: fold the first `absorb` streamed arrivals back into the base
     geodesics through the service's write path (admission-controlled,
     runs between read flushes) before serving the rest.
+    replicas: serve reads from this many log-shipped reader replicas
+    behind a consistent-hash router instead of one service; all absorbs
+    still go through the single writer, whose update-log appends the
+    replicas tail (:mod:`repro.launch.replication`).  0 (default) keeps
+    the single-service path.
+    router_vnodes: ring points per replica in the consistent-hash router.
+    pipeline_depth: in-flight flush window per replica service (>1
+    overlaps a slow flush with the next batch's coalescing).
     mesh_shape: (data, model) device grid; None serves single-device.
     regime/landmarks: scale-regime selection
     (:func:`repro.core.pipeline.stages_for`) - "dense" pins the exact
@@ -228,26 +239,96 @@ def serve_manifold(
     if resume and checkpoint_dir:
         # a restarted server replays absorbed arrivals, not just the fit
         mapper.replay_update_log(checkpoint_dir)
-    service = BatchedMapperService(
-        mapper, max_batch=stream_batch, max_latency_ms=max_latency_ms
-    )
     n_absorbed = 0
-    with service:
-        service.warmup(x_stream.shape[1])
-        t0 = time.time()
-        if absorb:
-            # write path: fold early arrivals into the base geodesics;
-            # every arrival is still queried below (absorbed points are
-            # then answered from the grown base they are part of)
-            report = service.absorb(x_stream[:absorb])
-            n_absorbed = report.absorbed
-        futures = [
-            service.submit(x_stream[lo : lo + arrival])
-            for lo in range(0, n_stream, arrival)
-        ]
-        y_stream = np.concatenate([f.result() for f in futures], axis=0)
-        t_serve = time.time() - t0
-    stats = service.stats()
+    replica_stats: list[dict] = []
+    if replicas:
+        import os
+        import tempfile
+
+        from repro.core.update import UPDATE_LOG_DIR, UpdateConfig
+        from repro.launch.replication import ReplicatedMapperFleet
+
+        # replicas rebuild their mappers from the base artifacts, so the
+        # fit is pulled to host exactly once and shared by every factory
+        # call (start, restart, generation reset)
+        art_host = {
+            a: np.asarray(art[a]) for a in mapper_cls.SERVING_ARTIFACTS
+        }
+
+        def make_mapper(update_cfg):
+            return mapper_cls.from_artifacts(
+                art_host, k=k, batch=stream_batch, backend=backend,
+                update=update_cfg, objective=objective,
+            )
+
+        log_dir = (
+            os.path.join(checkpoint_dir, UPDATE_LOG_DIR)
+            if checkpoint_dir
+            else tempfile.mkdtemp(prefix="repro-replication-")
+        )
+        fleet = ReplicatedMapperFleet(
+            make_mapper, log_dir,
+            replicas=replicas, vnodes=router_vnodes,
+            update=UpdateConfig(), pipeline_depth=pipeline_depth,
+            max_batch=stream_batch, max_latency_ms=max_latency_ms,
+        )
+        with fleet:
+            t0 = time.time()
+            if absorb:
+                report = fleet.absorb(x_stream[:absorb])
+                n_absorbed = report.absorbed
+                # serve from the absorbed generation: wait for every
+                # replica to cut over before the read burst (otherwise a
+                # lagging replica answers from the pre-absorb frame -
+                # internally consistent, but a different eigenbasis than
+                # the quality check below compares against)
+                fleet.sync(timeout=60.0)
+            futures = [
+                fleet.submit(x_stream[lo : lo + arrival])
+                for lo in range(0, n_stream, arrival)
+            ]
+            y_stream = np.concatenate([f.result() for f in futures], axis=0)
+            t_serve = time.time() - t0
+            fleet.sync(timeout=60.0)
+            fstats = fleet.stats()
+        mapper = fleet.writer_mapper
+        replica_stats = fstats["replicas"]
+        reqs = sum(s["requests"] for s in replica_stats)
+        stats = {
+            # pooled read-path numbers: p50 averages the replicas, p99 is
+            # the worst replica (tail latency is a max, not a mean)
+            "latency_p50_ms": float(np.mean(
+                [s["latency_p50_ms"] for s in replica_stats]
+            )) if reqs else float("nan"),
+            "latency_p99_ms": float(np.max(
+                [s["latency_p99_ms"] for s in replica_stats]
+            )) if reqs else float("nan"),
+            "mean_batch": float(np.mean(
+                [s["mean_batch"] for s in replica_stats]
+            )) if reqs else float("nan"),
+            "requests": reqs,
+        }
+    else:
+        service = BatchedMapperService(
+            mapper, max_batch=stream_batch, max_latency_ms=max_latency_ms,
+            pipeline_depth=pipeline_depth,
+        )
+        with service:
+            service.warmup(x_stream.shape[1])
+            t0 = time.time()
+            if absorb:
+                # write path: fold early arrivals into the base geodesics;
+                # every arrival is still queried below (absorbed points are
+                # then answered from the grown base they are part of)
+                report = service.absorb(x_stream[:absorb])
+                n_absorbed = report.absorbed
+            futures = [
+                service.submit(x_stream[lo : lo + arrival])
+                for lo in range(0, n_stream, arrival)
+            ]
+            y_stream = np.concatenate([f.result() for f in futures], axis=0)
+            t_serve = time.time() - t0
+        stats = service.stats()
 
     # quality in the *served* frame: the absorb republished the base
     # embedding (possibly with flipped eigenvector signs), and every
@@ -287,6 +368,11 @@ def serve_manifold(
         "serving_version": mapper.version,
         "regime": "sparse" if sparse_fit else "dense",
         "objective": objective,
+        "replicas": replicas,
+        "replica_stats": replica_stats,
+        "replication_lag_steps": (
+            max((s["lag_steps"] for s in replica_stats), default=0)
+        ),
     }
 
 
@@ -362,6 +448,22 @@ def build_parser() -> argparse.ArgumentParser:
         help="sparse-regime landmark budget m (0: ~4 sqrt(n) default)",
     )
     ap.add_argument(
+        "--replicas", type=int, default=0,
+        help="serve reads from this many log-shipped reader replicas "
+        "behind a consistent-hash router (0: single service); absorbs "
+        "always go through the single writer",
+    )
+    ap.add_argument(
+        "--router", type=int, default=64, metavar="VNODES",
+        help="consistent-hash ring points per replica (more flattens "
+        "load at O(vnodes) join/leave cost)",
+    )
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=2,
+        help="in-flight flush window per service (>1 overlaps a slow "
+        "flush with the next batch's coalescing; 1 is strictly serial)",
+    )
+    ap.add_argument(
         "--objective", choices=("spectral", "stress", "path"),
         default="spectral",
         help="embedding objective: spectral = classical-MDS eigensolve "
@@ -400,6 +502,9 @@ def main():
             regime=args.regime,
             landmarks=args.landmarks,
             objective=args.objective,
+            replicas=args.replicas,
+            router_vnodes=args.router,
+            pipeline_depth=args.pipeline_depth,
         )
         print(
             f"[serve manifold] regime={out['regime']} "
@@ -414,6 +519,14 @@ def main():
             f"err={out['procrustes_error']:.2e} "
             f"rv={out['residual_variance']:.3f}"
         )
+        for s in out["replica_stats"]:
+            print(
+                f"  [replica {s['replica']}] requests={s['requests']} "
+                f"p50={s['latency_p50_ms']:.1f}ms "
+                f"p99={s['latency_p99_ms']:.1f}ms "
+                f"applied_step={s['applied_step']} "
+                f"lag={s['lag_steps']} alive={s['alive']}"
+            )
         return
     if not args.arch:
         ap.error("--arch is required unless --manifold is given")

@@ -14,6 +14,14 @@ too):
 * Fixed-shape execution: coalesced batches are zero-padded to ``max_batch``
   rows by default so the device executable is compiled exactly once, not
   once per coalesced size - p99 latency is jitter, not recompilation.
+* Pipelined dispatch (``pipeline_depth > 1``): flushes run on a small
+  worker pool behind a bounded in-flight window, so a slow mesh flush
+  overlaps the *next* batch's coalescing instead of serializing with it -
+  the read path keeps the device busy while the scheduler thread is only
+  ever batching.  Depth 1 (default) is the original strictly-serial
+  dispatch.  Absorbs still never run concurrently with a mapped batch:
+  the scheduler drains the in-flight window (acquiring every permit)
+  before executing write work.
 * :meth:`BatchedMapperService.stats` - per-request latency percentiles
   (p50/p99) and batch occupancy over a bounded rolling window (memory
   stays flat under sustained traffic), plus lifetime request/point
@@ -73,6 +81,12 @@ class BatchedMapperService:
     absorb_admission: reject ``submit_absorb`` while more than this many
     *requests* are waiting in the read queue (None: ``max_batch``,
     i.e. roughly one flush worth of backlog).
+    pipeline_depth: maximum flushes in flight at once.  1 (default)
+    dispatches on the scheduler thread exactly as before; >1 dispatches
+    each coalesced batch to a worker pool behind a semaphore window of
+    this many permits, so batching the next flush overlaps a slow
+    current one.  Absorbs drain the window first (write work stays
+    strictly serialized against every mapped batch).
     """
 
     def __init__(
@@ -84,12 +98,17 @@ class BatchedMapperService:
         pad_batches: bool = True,
         stats_window: int = 4096,
         absorb_admission: int | None = None,
+        pipeline_depth: int = 1,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if stats_window < 1:
             raise ValueError(
                 f"stats_window must be >= 1, got {stats_window}"
+            )
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}"
             )
         self.mapper = mapper
         self.max_batch = max_batch
@@ -98,10 +117,15 @@ class BatchedMapperService:
         self.absorb_admission = (
             absorb_admission if absorb_admission is not None else max_batch
         )
+        self.pipeline_depth = pipeline_depth
         self._queue: queue.Queue[_Request] = queue.Queue()
         self._absorbs: collections.deque = collections.deque()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self._executor = None              # worker pool when depth > 1
+        self._inflight_sem = threading.BoundedSemaphore(pipeline_depth)
+        self._inflight = 0
+        self._inflight_peak = 0
         self._lock = threading.Lock()
         # rolling stats windows (bounded) + lifetime counters
         self._latencies: collections.deque[float] = collections.deque(
@@ -123,17 +147,27 @@ class BatchedMapperService:
     def start(self) -> "BatchedMapperService":
         if self._thread is not None:
             raise RuntimeError("service already started")
+        if self.pipeline_depth > 1:
+            from concurrent.futures import ThreadPoolExecutor
+
+            self._executor = ThreadPoolExecutor(
+                max_workers=self.pipeline_depth,
+                thread_name_prefix="mapper-flush",
+            )
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         return self
 
     def stop(self):
         """Stop the scheduler; pending requests (and admitted absorbs)
-        are drained first."""
+        are drained first, including any in-flight pipelined flushes."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
 
     def __enter__(self):
         return self.start()
@@ -237,7 +271,7 @@ class BatchedMapperService:
                     break
                 batch.append(req)
                 count += req.x.shape[0]
-            self._flush(batch)
+            self._dispatch(batch)
             if pending is None and self._queue.empty():
                 # between flushes with no backlog: absorb window
                 self._run_absorbs()
@@ -248,6 +282,41 @@ class BatchedMapperService:
                 # (bounding the per-flush read-latency impact)
                 self._run_absorbs(limit=1)
 
+    def _dispatch(self, batch: list[_Request]):
+        """Run one coalesced flush: inline at depth 1, else on the worker
+        pool behind the bounded in-flight window (the acquire here is the
+        backpressure - the scheduler stalls batching only when the whole
+        window is busy)."""
+        if self._executor is None:
+            self._flush(batch)
+            return
+        self._inflight_sem.acquire()
+        with self._lock:
+            self._inflight += 1
+            self._inflight_peak = max(self._inflight_peak, self._inflight)
+
+        def run():
+            try:
+                self._flush(batch)
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+                self._inflight_sem.release()
+
+        self._executor.submit(run)
+
+    def _drain_inflight(self):
+        """Wait until no flush is in flight (scheduler thread only):
+        acquire every window permit, then hand them all back.  This is
+        the barrier that keeps absorbs strictly serialized against
+        mapped batches under pipelined dispatch."""
+        if self._executor is None:
+            return
+        for _ in range(self.pipeline_depth):
+            self._inflight_sem.acquire()
+        for _ in range(self.pipeline_depth):
+            self._inflight_sem.release()
+
     def _absorb_overdue(self) -> bool:
         if not self._absorbs:
             return False
@@ -257,6 +326,9 @@ class BatchedMapperService:
     def _run_absorbs(self, limit: int | None = None):
         """Execute admitted absorbs (scheduler thread only, so updates
         are strictly serialized with read flushes)."""
+        if not self._absorbs:
+            return
+        self._drain_inflight()
         while self._absorbs and (limit is None or limit > 0):
             x, fut, _ = self._absorbs.popleft()
             if limit is not None:
@@ -311,6 +383,7 @@ class BatchedMapperService:
             n_batches = self._n_batches
             absorbed = self._n_absorbed
             absorb_calls = self._n_absorb_calls
+            inflight_peak = self._inflight_peak
             wall = (
                 (self._t_last - self._t_first)
                 if self._t_first is not None and self._t_last is not None
@@ -324,6 +397,8 @@ class BatchedMapperService:
                 "mean_batch": float("nan"), "points_per_s": 0.0,
                 "window": 0, "absorbed": absorbed,
                 "absorb_calls": absorb_calls,
+                "pipeline_depth": self.pipeline_depth,
+                "inflight_peak": inflight_peak,
             }
         return {
             "requests": n_requests,
@@ -336,4 +411,6 @@ class BatchedMapperService:
             "window": int(lat.size),
             "absorbed": absorbed,
             "absorb_calls": absorb_calls,
+            "pipeline_depth": self.pipeline_depth,
+            "inflight_peak": inflight_peak,
         }

@@ -114,3 +114,60 @@ def test_pairwise_nonneg_symmetric_zero_diag(x):
     assert (d >= 0).all()
     np.testing.assert_allclose(d, d.T, rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+
+# --------------------------------------------- consistent-hash router --
+
+from repro.launch.router import ConsistentHashRouter, stable_hash  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_nodes=st.integers(2, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_router_load_within_2x_of_uniform(n_nodes, seed):
+    """With the default 64 vnodes per replica, every replica's share of
+    a large keyspace stays within 2x of uniform."""
+    nodes = [f"replica-{seed}-{i}" for i in range(n_nodes)]
+    router = ConsistentHashRouter(nodes)
+    n_keys = 2000
+    counts = router.spread(f"key-{seed}-{j}" for j in range(n_keys))
+    uniform = n_keys / n_nodes
+    assert set(counts) == set(nodes)
+    for node, c in counts.items():
+        assert uniform / 2 < c < uniform * 2, (node, c, dict(counts))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_nodes=st.integers(2, 8),
+    victim=st.integers(0, 7),
+    seed=st.integers(0, 10_000),
+)
+def test_router_removal_is_minimal_reshuffle(n_nodes, victim, seed):
+    """Removing one replica remaps EXACTLY the keys it owned (~1/N of
+    the space) - every other key keeps its replica."""
+    nodes = [f"replica-{seed}-{i}" for i in range(n_nodes)]
+    gone = nodes[victim % n_nodes]
+    router = ConsistentHashRouter(nodes)
+    keys = [f"key-{seed}-{j}" for j in range(1000)]
+    before = {k: router.route(k) for k in keys}
+    router.remove(gone)
+    moved = 0
+    for k in keys:
+        after = router.route(k)
+        if after != before[k]:
+            moved += 1
+            assert before[k] == gone, (k, before[k], after)
+        else:
+            assert before[k] != gone
+    assert moved == sum(1 for v in before.values() if v == gone)
+
+
+@settings(max_examples=30, deadline=None)
+@given(key=st.one_of(st.text(), st.integers(), st.binary()))
+def test_stable_hash_is_deterministic_64bit(key):
+    h = stable_hash(key)
+    assert h == stable_hash(key)
+    assert 0 <= h < 2**64

@@ -1,0 +1,448 @@
+"""Fault-injection tests for the replicated serving fleet and the whole
+update path: replica kill/restart convergence, writer crash between
+publish and log append, lagging replicas, generation cutover, torn
+update-log tails, the VersionedArtifacts lock-free-read claim under
+threaded stress, and the consistent-hash router's balance/minimal-
+reshuffle properties (deterministic twins of the hypothesis tests in
+``test_property.py`` - these always run)."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import isomap, streaming
+from repro.core.artifacts import VersionedArtifacts
+from repro.core.update import (
+    GeodesicUpdater, TornUpdateLogWarning, UPDATE_LOG_DIR, UpdateConfig,
+    read_log_entries,
+)
+from repro.launch.replication import ReaderReplica, ReplicatedMapperFleet
+from repro.launch.router import ConsistentHashRouter
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """A fitted base manifold (host artifact dict) + on-manifold
+    arrivals - the shared substrate every fleet in this module builds
+    its mappers from."""
+    from repro.data import euler_isometric_swiss_roll
+
+    x, _ = euler_isometric_swiss_roll(272, seed=0)
+    base, new = x[:256], x[256:]
+    cfg = isomap.IsomapConfig(k=10, d=2, block=128)
+    res = isomap.isomap(jnp.asarray(base), cfg, keep_geodesics=True)
+    art = {
+        "x": np.asarray(base, np.float32),
+        "geodesics": np.asarray(res.geodesics),
+        "embedding": np.asarray(res.embedding),
+    }
+    return art, np.asarray(new, np.float32)
+
+
+def _factory(art):
+    def make_mapper(update_cfg):
+        return streaming.StreamingMapper.from_artifacts(
+            art, k=10, update=update_cfg
+        )
+
+    return make_mapper
+
+
+def _fleet(art, tmp_path, **kw):
+    kw.setdefault("max_latency_ms", 2.0)
+    kw.setdefault("poll_s", 0.01)
+    return ReplicatedMapperFleet(
+        _factory(art), str(tmp_path / UPDATE_LOG_DIR), **kw
+    )
+
+
+def _assert_bit_identical(mapper, writer, who: str):
+    assert mapper.version == writer.version, (
+        who, mapper.version, writer.version
+    )
+    assert np.array_equal(
+        np.asarray(mapper.geodesics), np.asarray(writer.geodesics)
+    ), f"{who}: geodesics diverged from the writer"
+    assert np.array_equal(
+        np.asarray(mapper.embedding), np.asarray(writer.embedding)
+    ), f"{who}: embedding diverged from the writer"
+    assert np.array_equal(
+        np.asarray(mapper.x_base), np.asarray(writer.x_base)
+    ), f"{who}: base points diverged from the writer"
+
+
+# ------------------------------------------------------ happy-path fleet --
+
+
+def test_replicas_converge_bit_identically(fitted, tmp_path):
+    """The acceptance criterion verbatim: with 2 replicas tailing the
+    log, every replica's post-replay snapshot is bit-identical to the
+    writer's (same generation, same arrays), while reads flow."""
+    art, new = fitted
+    with _fleet(art, tmp_path, replicas=2) as fleet:
+        y = fleet.map(new[:4])
+        assert y.shape == (4, 2) and np.isfinite(y).all()
+        r1 = fleet.absorb(new[:6])
+        r2 = fleet.absorb(new[6:])
+        assert r1.absorbed and r2.absorbed
+        assert fleet.writer_log_step == 2
+        assert fleet.sync(timeout=60), "replicas failed to catch up"
+        writer = fleet.writer_mapper
+        assert writer.version == 2 and writer.n_base == 272
+        assert len(fleet.replicas) == 2
+        for name, replica in fleet.replicas.items():
+            _assert_bit_identical(replica.mapper, writer, name)
+            assert replica.gen == 1
+        # absorbs stayed single-writer: only the writer has an updater
+        for replica in fleet.replicas.values():
+            assert replica.mapper._updater.cfg.log_dir is None
+        with pytest.raises(RuntimeError, match="read-only"):
+            next(iter(fleet.replicas.values())).service.mapper.absorb(new[:1])
+
+
+def test_killed_replica_restarts_and_converges(fitted, tmp_path):
+    """Kill a replica mid-replay (entries still unapplied), keep
+    absorbing, restart it: the fresh incarnation rebuilds from the base
+    artifacts and converges bit-identically by replay alone - and reads
+    keep completing throughout."""
+    art, new = fitted
+    with _fleet(art, tmp_path, replicas=2) as fleet:
+        fleet.absorb(new[:6])
+        assert fleet.sync(timeout=60)
+        victim = next(iter(fleet.replicas))
+        dead = fleet.kill_replica(victim)
+        assert victim not in fleet.router.nodes
+        # the dead incarnation is frozen at the log position it reached
+        assert dead.mapper.version == 1
+        # writer keeps absorbing while the replica is down - the replica
+        # is now generations of serving state behind
+        fleet.absorb(new[6:12])
+        # reads keep completing while the replica is away (routed to the
+        # survivor or the writer)
+        for i in range(8):
+            y = fleet.map(new[12 + (i % 4):13 + (i % 4)], key=f"req{i}")
+            assert np.isfinite(y).all()
+        fleet.restart_replica(victim)
+        assert victim in fleet.router.nodes
+        assert fleet.sync(timeout=60), "restarted replica never caught up"
+        _assert_bit_identical(
+            fleet.replicas[victim].mapper, fleet.writer_mapper, victim
+        )
+
+
+def test_reads_complete_through_kill_restart_churn(fitted, tmp_path):
+    """Open-loop reads submitted continuously while a replica is killed
+    and restarted: every future resolves (the router falls back to the
+    survivor/writer during the gap)."""
+    art, new = fitted
+    with _fleet(art, tmp_path, replicas=2) as fleet:
+        futures, stop = [], threading.Event()
+
+        def submitter():
+            i = 0
+            while not stop.is_set():
+                futures.append(fleet.submit(new[i % 12: i % 12 + 1]))
+                i += 1
+                time.sleep(0.002)
+
+        t = threading.Thread(target=submitter)
+        t.start()
+        try:
+            time.sleep(0.05)
+            victim = next(iter(fleet.replicas))
+            fleet.kill_replica(victim)
+            time.sleep(0.05)
+            fleet.restart_replica(victim)
+            time.sleep(0.05)
+        finally:
+            stop.set()
+            t.join()
+        assert len(futures) > 10
+        for f in futures:
+            y = f.result(timeout=60)
+            assert y.shape == (1, 2) and np.isfinite(y).all()
+
+
+# --------------------------------------------------------- writer crash --
+
+
+def test_writer_crash_between_publish_and_log(fitted, tmp_path):
+    """The writer publishes a flush, then crashes before the log append
+    lands: the flush exists only in the dead writer's memory.  Replicas
+    and the restarted writer both replay the durable log - they agree
+    bit-identically with each other (the unlogged flush is consistently
+    lost, never half-visible)."""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    writer = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    writer.absorb(new[:6])                # durable: logged
+    assert writer.version == 1
+
+    def crash(new_points, flush_delta):
+        raise OSError("simulated crash before the log append")
+
+    writer._updater._save_log = crash
+    with pytest.raises(OSError, match="simulated crash"):
+        writer.absorb(new[6:12])
+    # the doomed writer DID publish before the failed append
+    assert writer.version == 2
+    # ... but the durable history holds one entry only
+    entries, torn = read_log_entries(log_dir)
+    assert torn is None and len(entries) == 1
+
+    replica = streaming.StreamingMapper.from_artifacts(art, k=10)
+    replica.replay_update_log(str(tmp_path))
+    restarted = streaming.StreamingMapper.from_artifacts(art, k=10)
+    restarted.replay_update_log(str(tmp_path))
+    _assert_bit_identical(replica, restarted, "replica-vs-restarted-writer")
+    assert replica.version == 1 and replica.n_base == 262
+
+
+# ------------------------------------------------------- lag + cutover --
+
+
+def test_lagging_replica_serves_consistent_older_generation(fitted,
+                                                            tmp_path):
+    """A replica several generations behind still answers reads - from
+    its own older but internally consistent snapshot - then converges
+    once it polls.  (Deterministic: the tailer never runs; polls are
+    explicit.)"""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    writer = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    replica = ReaderReplica(
+        "lagger", lambda: _factory(art)(None), log_dir, poll_s=3600.0
+    )
+    for lo in (0, 6, 12):                 # three generations ahead
+        writer.absorb(new[lo:lo + 6])
+    assert writer.version == 3
+    # unpolled: serves the fit-time generation, internally consistent
+    snap = replica.mapper.snapshot()
+    assert snap.version == 0
+    assert snap["x"].shape[0] == snap["geodesics"].shape[0] == 256
+    y = replica.mapper(jnp.asarray(new[:3]))
+    assert np.isfinite(np.asarray(y)).all()
+    applied = replica.poll()
+    assert applied == 3 and replica.applied_step == 3
+    _assert_bit_identical(replica.mapper, writer, "lagger")
+
+
+def test_fresh_writer_generation_resets_replica(fitted, tmp_path):
+    """A fresh writer reusing the log directory starts a new generation
+    that shadows the old chain; a tailing replica detects the cutover,
+    rebuilds from the base artifacts, and converges onto the NEW
+    writer's state (never a mix of both chains)."""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    w1 = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    w1.absorb(new[:6])
+    replica = ReaderReplica(
+        "r", lambda: _factory(art)(None), log_dir, poll_s=3600.0
+    )
+    assert replica.poll() == 1
+    assert replica.gen == 1 and replica.mapper.version == 1
+    # w1 "crashes"; a fresh writer starts a new generation in the same dir
+    w2 = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    w2.absorb(new[8:14])
+    assert replica.poll() == 1
+    assert replica.gen == 2
+    _assert_bit_identical(replica.mapper, w2, "reset-replica")
+    assert np.array_equal(np.asarray(replica.mapper.x_base)[256:],
+                          new[8:14])
+
+
+# ------------------------------------------------- torn-tail durability --
+
+
+def test_torn_tail_array_file_detected_and_skipped(fitted, tmp_path):
+    """A torn/truncated tail record (partial arrays.npz) is detected,
+    warned about, and skipped: replay covers the complete prefix and is
+    bit-identical to the writer's state at that log position."""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    writer = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    writer.absorb(new[:6])
+    geo_after_1 = np.asarray(writer.geodesics)
+    emb_after_1 = np.asarray(writer.embedding)
+    writer.absorb(new[6:12])
+    # tear the tail: truncate step 2's array payload mid-file
+    npz = os.path.join(log_dir, "step_0000000002", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.warns(TornUpdateLogWarning, match="step 2 is torn"):
+        entries, torn = read_log_entries(log_dir)
+    assert torn == 2 and [e.step for e in entries] == [1]
+
+    restored = streaming.StreamingMapper.from_artifacts(art, k=10)
+    with pytest.warns(TornUpdateLogWarning):
+        n = restored.replay_update_log(str(tmp_path))
+    assert n == 6 and restored.version == 1
+    assert np.array_equal(np.asarray(restored.geodesics), geo_after_1)
+    assert np.array_equal(np.asarray(restored.embedding), emb_after_1)
+
+
+def test_torn_manifest_stops_the_scan_at_the_hole(fitted, tmp_path):
+    """An unreadable manifest mid-chain stops the read at the complete
+    prefix: entries past the hole would consume the wrong points, so
+    they are dropped, not replayed as garbage."""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    writer = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    writer.absorb(new[:6])
+    writer.absorb(new[6:10])
+    writer.absorb(new[10:14])
+    man = os.path.join(log_dir, "step_0000000002", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 2, "keys"')   # partial JSON write
+    with pytest.warns(TornUpdateLogWarning, match="step 2"):
+        entries, torn = read_log_entries(log_dir)
+    assert torn == 2 and [e.step for e in entries] == [1]
+    # the tailer skips the hole silently (warn=False) and applies the
+    # prefix; it retries past the hole on later polls
+    replica = ReaderReplica(
+        "r", lambda: _factory(art)(None), log_dir, poll_s=3600.0
+    )
+    assert replica.poll() == 1
+    assert replica.applied_step == 1 and replica.mapper.version == 1
+
+
+def test_foreign_checkpoints_do_not_stop_the_scan(fitted, tmp_path):
+    """A non-update-log checkpoint sharing the directory (no update_log
+    marker) is skipped without being treated as a torn entry."""
+    art, new = fitted
+    log_dir = str(tmp_path / UPDATE_LOG_DIR)
+    writer = streaming.StreamingMapper.from_artifacts(
+        art, k=10, update=UpdateConfig(log_dir=log_dir)
+    )
+    writer.absorb(new[:6])
+    from repro.checkpoint import CheckpointManager
+
+    CheckpointManager(log_dir).save(
+        5, {"weights": np.zeros(3)}, blocking=True
+    )
+    writer.absorb(new[6:10])              # step 2 (in-memory counter)
+    entries, torn = read_log_entries(log_dir)
+    assert torn is None and [e.step for e in entries] == [1, 2]
+
+
+# ------------------------------------ versioned artifacts under threads --
+
+
+def test_versioned_artifacts_mixed_generation_stress():
+    """The PR-5 lock-free-read claim as a regression test: concurrent
+    readers during rapid publishes never observe arrays from two
+    different generations in one snapshot."""
+    n_pub = 400
+    va = VersionedArtifacts({
+        "a": np.zeros(8), "b": np.zeros(8),
+    })
+    mixed, stop = [], threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            snap = va.current            # one atomic capture
+            if not np.array_equal(snap["a"], snap["b"]):
+                mixed.append((snap.version, snap["a"][0], snap["b"][0]))
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    for i in range(1, n_pub + 1):
+        # both arrays must always carry the same generation stamp
+        va.publish({"a": np.full(8, float(i)), "b": np.full(8, float(i))})
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not mixed, f"mixed-generation snapshots observed: {mixed[:5]}"
+    assert va.version == n_pub
+
+
+def test_versioned_artifacts_await_version():
+    va = VersionedArtifacts({"a": np.zeros(2)})
+    assert va.await_version(0, timeout=0.1)         # already there
+    assert not va.await_version(1, timeout=0.05)    # nothing published
+    got = []
+
+    def waiter():
+        got.append(va.await_version(3, timeout=10.0))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    for i in range(3):
+        time.sleep(0.01)
+        va.publish({"a": np.full(2, float(i))})
+    t.join()
+    assert got == [True] and va.version == 3
+
+
+# ------------------------------------------------- router (determinstic) --
+
+
+def test_router_spreads_within_2x_of_uniform():
+    nodes = [f"replica-{i}" for i in range(4)]
+    router = ConsistentHashRouter(nodes, vnodes=64)
+    counts = router.spread(f"key-{i}" for i in range(4000))
+    uniform = 4000 / len(nodes)
+    assert set(counts) == set(nodes)
+    for node, c in counts.items():
+        assert uniform / 2 < c < uniform * 2, (node, c, counts)
+
+
+def test_router_removal_remaps_only_the_leavers_keys():
+    nodes = [f"replica-{i}" for i in range(4)]
+    router = ConsistentHashRouter(nodes, vnodes=64)
+    keys = [f"key-{i}" for i in range(2000)]
+    before = {k: router.route(k) for k in keys}
+    router.remove("replica-2")
+    moved = 0
+    for k in keys:
+        after = router.route(k)
+        if after != before[k]:
+            moved += 1
+            # the EXACT property: only the leaver's keys move
+            assert before[k] == "replica-2", (k, before[k], after)
+    # ... and all of its keys did move somewhere else
+    assert moved == sum(1 for v in before.values() if v == "replica-2")
+    assert 0.05 < moved / len(keys) < 0.55   # ~1/N of the space
+
+
+def test_router_assignment_stable_across_instances():
+    """Ring positions are MD5, not the salted builtin hash: two routers
+    over the same nodes agree key-for-key (a restarted frontend keeps
+    every client's affinity)."""
+    a = ConsistentHashRouter(["r0", "r1", "r2"])
+    b = ConsistentHashRouter(["r2", "r0", "r1"])   # insertion order differs
+    for i in range(500):
+        assert a.route(f"k{i}") == b.route(f"k{i}")
+
+
+def test_router_edge_cases():
+    with pytest.raises(ValueError, match="vnodes"):
+        ConsistentHashRouter(vnodes=0)
+    router = ConsistentHashRouter()
+    with pytest.raises(LookupError):
+        router.route("k")
+    router.add("only")
+    router.add("only")                    # idempotent
+    assert len(router) == 1
+    assert router.route("anything") == "only"
+    router.remove("missing")              # ignored
+    router.remove("only")
+    with pytest.raises(LookupError):
+        router.route("k")
