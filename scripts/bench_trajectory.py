@@ -17,9 +17,18 @@ different label (e.g. ``--label ci-smoke`` vs a maintainer's full run)
 appends alongside.  The write is atomic (tmp file + ``os.replace``) so
 a crashed run never truncates the tracked history.
 
+``--check-regressions`` adds a soft perf gate after the fold: for every
+series, the newest point is compared against the previous point with the
+same (backend, label); a slowdown beyond ``--warn-threshold`` (default
+20%) prints a warning to stderr.  Soft means soft — the exit code stays
+0, so a noisy CI runner can't turn a timing wobble into a red build, but
+the kink is called out in the log the day it appears.
+
 Usage:
     python scripts/bench_trajectory.py [--bench-json PATH] [--out PATH]
                                        [--label LABEL] [--prefix PFX ...]
+                                       [--check-regressions]
+                                       [--warn-threshold FRAC]
 
 Stdlib only — no repro imports, safe to run before PYTHONPATH is set.
 """
@@ -81,6 +90,39 @@ def merge(trajectory: dict, bench: dict, label: str, prefixes) -> int:
     return written
 
 
+def find_regressions(trajectory: dict, threshold: float) -> list[str]:
+    """Soft regression scan: for each series, compare the newest point's
+    ``us_per_call`` against the previous point with the same
+    (backend, label).  Returns warning strings for slowdowns beyond
+    ``threshold`` (0.20 = 20% slower).  Zero-time probe rows and
+    sub-noise timings (< 1 us) are skipped."""
+    warnings = []
+    for name, points in sorted(trajectory.get("series", {}).items()):
+        by_key: dict[tuple, list[dict]] = {}
+        for p in points:
+            by_key.setdefault(
+                (p.get("backend"), p.get("label")), []
+            ).append(p)
+        for (backend, label), pts in by_key.items():
+            if len(pts) < 2:
+                continue
+            pts = sorted(pts, key=lambda p: str(p.get("date", "")))
+            prev, newest = pts[-2], pts[-1]
+            t_prev = float(prev.get("us_per_call") or 0.0)
+            t_new = float(newest.get("us_per_call") or 0.0)
+            if t_prev < 1.0 or t_new < 1.0:
+                continue
+            if t_new > t_prev * (1.0 + threshold):
+                warnings.append(
+                    f"bench_trajectory: WARNING {name} "
+                    f"[{backend}/{label}] slowed "
+                    f"{t_new / t_prev:.2f}x: {t_prev:.1f} -> "
+                    f"{t_new:.1f} us_per_call "
+                    f"({prev.get('date')} -> {newest.get('date')})"
+                )
+    return warnings
+
+
 def atomic_write(path: str, data: dict) -> None:
     fd, tmp = tempfile.mkstemp(
         dir=os.path.dirname(path) or ".", suffix=".tmp"
@@ -119,6 +161,17 @@ def main(argv=None) -> int:
         help="only fold rows whose name starts with PFX (repeatable; "
         "default: all rows)",
     )
+    ap.add_argument(
+        "--check-regressions", action="store_true",
+        help="after folding, warn on stderr when a series' newest point "
+        "is slower than its previous same-(backend, label) point by "
+        "more than --warn-threshold (soft: exit code stays 0)",
+    )
+    ap.add_argument(
+        "--warn-threshold", type=float, default=0.20, metavar="FRAC",
+        help="fractional slowdown that triggers a regression warning "
+        "(default 0.20 = 20%%)",
+    )
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.bench_json):
@@ -133,6 +186,13 @@ def main(argv=None) -> int:
           f"{os.path.basename(args.bench_json)} into "
           f"{os.path.relpath(args.out, REPO)} "
           f"({len(trajectory['series'])} series)")
+    if args.check_regressions:
+        found = find_regressions(trajectory, args.warn_threshold)
+        for line in found:
+            print(line, file=sys.stderr)
+        if not found:
+            print("bench_trajectory: no regressions beyond "
+                  f"{args.warn_threshold:.0%}", file=sys.stderr)
     return 0
 
 

@@ -1,0 +1,109 @@
+"""Measured-autotune smoke: calibrate tiny shapes end to end and assert
+the contract CI cares about.
+
+Runs entirely on CPU (``mode="pallas"`` executes the real kernels under
+the Pallas interpreter, so tile configs actually reach the kernels) at
+tiny shapes, in two passes against one calibration store:
+
+1. **Cold, ``REPRO_MEASURE_AUTOTUNE=refresh``** — every family (fused
+   min-plus, frontier, kNN) measures its top-K modeled candidates,
+   persists the winner, and the measured winner's *output* is checked
+   bit-identical to the modeled winner's (tile choices tune speed, never
+   results).
+2. **Warm, ``REPRO_MEASURE_AUTOTUNE=1``** — the process-level caches are
+   cleared, resolution is repeated, and :func:`repro.kernels.measure
+   .sweep_count` must not move: a warm store performs ZERO timing
+   sweeps.
+
+Usage:
+    PYTHONPATH=src python scripts/measure_smoke.py [--store PATH]
+
+Exits non-zero on any violated assertion; prints one line per check.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--store", default=None, metavar="PATH",
+        help="calibration-store path (default: a fresh temp file, so "
+        "the smoke never touches a real store)",
+    )
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as td:
+        store = args.store or os.path.join(td, "tuning.json")
+        os.environ["REPRO_TUNING_PATH"] = store
+        os.environ["REPRO_MEASURE_AUTOTUNE"] = "refresh"
+
+        import numpy as np
+
+        from repro.kernels import autotune, measure
+
+        # ---- pass 1: cold refresh — measure, persist, check outputs --
+        mp = measure.calibrate_minplus(
+            "minplus_update", 32, 64, 32, mode="pallas"
+        )
+        assert mp is not None and mp.source == "measured", mp
+        assert mp.time_s <= mp.default_time_s, (
+            f"measured winner {mp.config} slower than the measured "
+            f"default {mp.default_config}"
+        )
+        modeled, _ = autotune.best_config("minplus_update", 32, 64, 32)
+        argset = measure._minplus_inputs("minplus_update", 32, 64, 32)
+        out_meas = np.asarray(measure.run_minplus(
+            "minplus_update", 32, 64, 32, mp.config,
+            mode="pallas", args=argset,
+        ))
+        out_model = np.asarray(measure.run_minplus(
+            "minplus_update", 32, 64, 32, modeled,
+            mode="pallas", args=argset,
+        ))
+        assert np.array_equal(out_meas, out_model), (
+            "measured winner's output differs from the modeled "
+            "winner's — tiles changed results"
+        )
+        print(f"measure_smoke: minplus winner {tuple(mp.config)} "
+              "bit-identical to modeled winner: OK")
+
+        kn = measure.calibrate_knn(32, 64, 3, 5, mode="pallas")
+        assert kn is not None and kn.time_s <= kn.default_time_s, kn
+        fr = measure.calibrate_frontier(64, 8, 8, mode="pallas")
+        assert fr is not None and fr.time_s <= fr.default_time_s, fr
+        cold_sweeps = measure.sweep_count()
+        assert cold_sweeps > 0, "refresh performed no timing sweeps"
+        assert os.path.exists(store), f"no store written at {store}"
+        print(f"measure_smoke: cold pass measured all families "
+              f"({cold_sweeps} sweeps), store at {store}: OK")
+
+        # ---- pass 2: warm store — zero additional timing sweeps ------
+        os.environ["REPRO_MEASURE_AUTOTUNE"] = "1"
+        autotune.clear_cache()  # drops store cache + resolution memos
+        mp2 = measure.calibrate_minplus(
+            "minplus_update", 32, 64, 32, mode="pallas"
+        )
+        kn2 = measure.calibrate_knn(32, 64, 3, 5, mode="pallas")
+        fr2 = measure.calibrate_frontier(64, 8, 8, mode="pallas")
+        assert mp2 is not None and mp2.source == "store", mp2
+        assert kn2 is not None and kn2.source == "store", kn2
+        assert fr2 is not None and fr2.source == "store", fr2
+        assert tuple(mp2.config) == tuple(mp.config), (mp2, mp)
+        assert measure.sweep_count() == cold_sweeps, (
+            f"warm store re-measured: {measure.sweep_count()} sweeps "
+            f"vs {cold_sweeps} after the cold pass"
+        )
+        cfg, src = autotune.resolve_tiles("minplus_update", 32, 64, 32)
+        assert src == "store" and cfg == mp.config._asdict(), (cfg, src)
+        print("measure_smoke: warm pass hit the store for all families, "
+              "zero re-measures: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,13 @@ Overrides (both read at every :func:`tiles_for` call):
   defaults.
 
 Explicit tile kwargs at an ``ops.*`` call site always win over both.
+
+Between the env pins and the analytic sweep sits the **measured
+calibration layer** (:mod:`repro.kernels.measure`): when
+``REPRO_MEASURE_AUTOTUNE`` enables it (or a persisted calibration store
+exists at ``REPRO_TUNING_PATH``), per-device measured winners and
+fitted machine-constant corrections are consulted before the analytic
+model — see that module for the store format and semantics.
 """
 from __future__ import annotations
 
@@ -112,13 +119,19 @@ def divides(cfg: TileConfig, m: int, n: int, k: int) -> bool:
 
 
 def modeled_cost(
-    op: str, m: int, n: int, k: int, cfg: TileConfig, *, itemsize: int = 4
+    op: str, m: int, n: int, k: int, cfg: TileConfig, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> Cost:
     """Roofline terms for running ``op`` on an (m, n) output with
     contraction depth k under tile config ``cfg``.
 
     ``op``: one of :data:`FUSED_OPS` (seeded accumulate) or
     ``"minplus"`` (plain product, no seed read).
+
+    ``hbm_bw``/``launch_s`` override the analytic machine constants —
+    the measured-calibration layer (:mod:`repro.kernels.measure`) passes
+    the per-device fitted bandwidth and launch cost here so unmeasured
+    shapes are ranked under the corrected model.
     """
     if op not in FUSED_OPS and op not in _UNSEEDED:
         raise ValueError(f"unknown op {op!r}; expected one of "
@@ -142,7 +155,7 @@ def modeled_cost(
         + m * n                    # output write
         + (m * n if seeded else 0)  # seed read
     )
-    hbm_s = hbm_bytes / HBM_BW
+    hbm_s = hbm_bytes / (hbm_bw if hbm_bw else HBM_BW)
 
     # VMEM working set: a + b tiles (double-buffered while streaming),
     # accumulator + output tile (+ seed tile view), and the transient
@@ -153,7 +166,7 @@ def modeled_cost(
         + unroll * bm * bn
     )
     return Cost(
-        time_s=max(compute_s, hbm_s),
+        time_s=max(compute_s, hbm_s) + launch_s,
         compute_s=compute_s,
         hbm_s=hbm_s,
         hbm_bytes=float(hbm_bytes),
@@ -193,16 +206,19 @@ def candidates(m: int, n: int, k: int) -> Iterator[TileConfig]:
 
 @functools.lru_cache(maxsize=4096)
 def best_config(
-    op: str, m: int, n: int, k: int, *, itemsize: int = 4
+    op: str, m: int, n: int, k: int, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> tuple[TileConfig, Cost]:
     """Sweep :func:`candidates` under :func:`modeled_cost` and return the
     winner with its cost.  Cached in-process per (op, m, n, k, itemsize);
     by construction the winner's modeled time never exceeds the static
-    default's (the default is part of the sweep)."""
+    default's (the default is part of the sweep).  ``hbm_bw``/
+    ``launch_s`` rank under measured-corrected machine constants."""
     best = None
     fallback = None  # smallest-working-set candidate, if none fit budget
     for cfg in candidates(m, n, k):
-        cost = modeled_cost(op, m, n, k, cfg, itemsize=itemsize)
+        cost = modeled_cost(op, m, n, k, cfg, itemsize=itemsize,
+                            hbm_bw=hbm_bw, launch_s=launch_s)
         fkey = (cost.vmem_bytes, cost.time_s)
         if fallback is None or fkey < fallback[0]:
             fallback = (fkey, cfg, cost)
@@ -226,42 +242,92 @@ def default_config(m: int, n: int, k: int) -> TileConfig:
     return clamp(DEFAULT, m, n, k)
 
 
-def _parse_override(raw: str) -> TileConfig:
+def _parse_knobs(env: str, raw: str, names: tuple[str, ...]):
+    """Parse an env tile pin into ints, reporting *all* invalid knobs in
+    one ValueError that names the env var that supplied them."""
     parts = raw.split(",")
-    if len(parts) != 4:
+    if len(parts) != len(names):
+        count = ("two", "three", "four")[len(names) - 2]
         raise ValueError(
-            f"{ENV_TILES}={raw!r}: expected 'bm,bn,bk,unroll' "
-            "(four comma-separated ints)"
+            f"{env}={raw!r}: expected '{','.join(names)}' "
+            f"({count} comma-separated ints)"
         )
-    try:
-        bm, bn, bk, unroll = (int(p) for p in parts)
-    except ValueError as e:
-        raise ValueError(f"{ENV_TILES}={raw!r}: {e}") from None
-    if min(bm, bn, bk, unroll) < 1:
-        raise ValueError(f"{ENV_TILES}={raw!r}: tiles must be >= 1")
-    return TileConfig(bm, bn, bk, unroll)
+    vals, problems = [], []
+    for name, part in zip(names, parts):
+        try:
+            val = int(part)
+        except ValueError:
+            problems.append(f"{name}={part!r} is not an int")
+            continue
+        if val < 1:
+            problems.append(f"{name}={val} must be >= 1")
+        vals.append(val)
+    if problems:
+        kind = "tiles" if names[0] == "bm" else "knobs"
+        raise ValueError(
+            f"{env}={raw!r}: {kind} must be >= 1 ints: "
+            + "; ".join(problems)
+        )
+    return vals
 
 
-def tiles_for(op: str, m: int, n: int, k: int, *, itemsize: int = 4) -> dict:
-    """Resolve the tile kwargs for one fused-kernel launch.
+def _parse_override(raw: str) -> TileConfig:
+    return TileConfig(
+        *_parse_knobs(ENV_TILES, raw, ("bm", "bn", "bk", "unroll"))
+    )
 
-    This is the entry point :mod:`repro.kernels.ops` consults when the
-    caller did not pass explicit tiles.  Resolution order:
 
-    1. ``REPRO_MINPLUS_TILES=bm,bn,bk,unroll`` - pinned for every call.
-    2. ``REPRO_MINPLUS_AUTOTUNE=0`` - empty dict (kernels' static
-       defaults apply).
-    3. Otherwise the cached roofline sweep (:func:`best_config`).
+def _measure_layer():
+    """Lazy import of the measured-calibration layer (it imports this
+    module at top level, so the dependency must point one way)."""
+    from repro.kernels import measure
 
-    Returns a dict suitable for ``**kwargs`` into the kernel wrappers.
+    return measure
+
+
+def resolve_tiles(
+    op: str, m: int, n: int, k: int, *, itemsize: int = 4
+) -> tuple[dict, str]:
+    """Resolve the tile kwargs for one fused-kernel launch, with
+    provenance.  Resolution order:
+
+    1. ``REPRO_MINPLUS_TILES=bm,bn,bk,unroll`` — pinned for every call
+       (absolute precedence over the calibration store).
+    2. ``REPRO_MINPLUS_AUTOTUNE=0`` — empty dict (kernels' static
+       defaults apply; the measured layer is bypassed too).
+    3. The measured-calibration layer (:mod:`repro.kernels.measure`):
+       persisted per-device winners, a fresh measurement sweep when
+       ``REPRO_MEASURE_AUTOTUNE`` enables one, or the analytic sweep
+       re-ranked under measured-corrected constants.
+    4. Otherwise the cached analytic roofline sweep
+       (:func:`best_config`).
+
+    Returns ``(tile kwargs, source)`` where source names what supplied
+    the tiles (``"env:REPRO_MINPLUS_TILES"``, ``"store"``,
+    ``"measured"``, ``"corrected"``, ``"modeled"``, or ``"default"``) —
+    ops.py puts the source in its validation errors.
     """
     raw = os.environ.get(ENV_TILES)
     if raw:
-        return _parse_override(raw)._asdict()
+        return _parse_override(raw)._asdict(), f"env:{ENV_TILES}"
     if os.environ.get(ENV_AUTOTUNE, "1").lower() in ("0", "false", "off"):
-        return {}
+        return {}, "default"
+    measure = _measure_layer()
+    if measure.active():
+        got = measure.resolve_minplus(op, m, n, k, itemsize=itemsize)
+        if got is not None:
+            cfg, source = got
+            return cfg._asdict(), source
     cfg, _ = best_config(op, m, n, k, itemsize=itemsize)
-    return cfg._asdict()
+    return cfg._asdict(), "modeled"
+
+
+def tiles_for(op: str, m: int, n: int, k: int, *, itemsize: int = 4) -> dict:
+    """Resolve the tile kwargs for one fused-kernel launch (see
+    :func:`resolve_tiles` for the resolution order; this wrapper drops
+    the provenance).  Returns a dict suitable for ``**kwargs`` into the
+    kernel wrappers."""
+    return resolve_tiles(op, m, n, k, itemsize=itemsize)[0]
 
 
 # ------------------------------------------------------- frontier kernel --
@@ -294,7 +360,8 @@ FRONTIER_DEFAULT = FrontierConfig(bs=8, bn=1024, bucket=4)
 
 
 def frontier_cost(
-    n: int, deg: int, cfg: FrontierConfig, *, itemsize: int = 4
+    n: int, deg: int, cfg: FrontierConfig, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> Cost:
     """Roofline terms for one *effective* masked sweep of the frontier
     kernel: the sweep itself plus its amortized share of the convergence
@@ -312,6 +379,7 @@ def frontier_cost(
     amortizes the (n, deg) nbr/w stream over more sources.
     """
     bs, bn, bucket = cfg
+    bw = hbm_bw if hbm_bw else HBM_BW
     lane_fill = min(bn, 128) / 128.0
     sublane_fill = min(bs, 8) / 8.0
     compute_s = (3.0 * bs * n * deg) / (VPU_OPS * lane_fill * sublane_fill)
@@ -320,9 +388,9 @@ def frontier_cost(
         + 2 * n * deg   # nbr + w stream
         + bs * n        # output write
     )
-    hbm_s = hbm_bytes / HBM_BW
-    sweep_s = max(compute_s, hbm_s)
-    check_s = itemsize * bs * n / HBM_BW
+    hbm_s = hbm_bytes / bw
+    sweep_s = max(compute_s, hbm_s) + launch_s
+    check_s = itemsize * bs * n / bw
     time_s = (
         sweep_s * (1.0 + (bucket - 1) / (2.0 * FRONTIER_SWEEPS_PRIOR))
         + check_s / bucket
@@ -372,12 +440,14 @@ def frontier_candidates(
 
 @functools.lru_cache(maxsize=4096)
 def best_frontier_config(
-    n: int, deg: int, m: int, *, itemsize: int = 4
+    n: int, deg: int, m: int, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> tuple[FrontierConfig, Cost]:
     """Sweep :func:`frontier_candidates` under :func:`frontier_cost`; the
     (clamped) default is part of the sweep so the winner never models
     slower than it.  Candidates busting VMEM fall back to the smallest
-    working set."""
+    working set.  ``hbm_bw``/``launch_s`` rank under measured-corrected
+    constants."""
     best = None
     fallback = None
     seen = set()
@@ -390,7 +460,8 @@ def best_frontier_config(
         if cfg in seen:
             continue
         seen.add(cfg)
-        cost = frontier_cost(n, deg, cfg, itemsize=itemsize)
+        cost = frontier_cost(n, deg, cfg, itemsize=itemsize,
+                             hbm_bw=hbm_bw, launch_s=launch_s)
         fkey = (cost.vmem_bytes, cost.time_s)
         if fallback is None or fkey < fallback[0]:
             fallback = (fkey, cfg, cost)
@@ -405,35 +476,28 @@ def best_frontier_config(
 
 
 def _parse_frontier_override(raw: str) -> FrontierConfig:
-    parts = raw.split(",")
-    if len(parts) != 3:
-        raise ValueError(
-            f"{ENV_FRONTIER_TILES}={raw!r}: expected 'bs,bn,bucket' "
-            "(three comma-separated ints)"
-        )
-    try:
-        bs, bn, bucket = (int(p) for p in parts)
-    except ValueError as e:
-        raise ValueError(f"{ENV_FRONTIER_TILES}={raw!r}: {e}") from None
-    if min(bs, bn, bucket) < 1:
-        raise ValueError(f"{ENV_FRONTIER_TILES}={raw!r}: knobs must be >= 1")
-    return FrontierConfig(bs, bn, bucket)
+    return FrontierConfig(
+        *_parse_knobs(ENV_FRONTIER_TILES, raw, ("bs", "bn", "bucket"))
+    )
 
 
-def frontier_config(n: int, deg: int, m: int) -> FrontierConfig:
-    """Resolve the frontier knobs for one sparse-geodesic solve.
-
-    Resolution order mirrors :func:`tiles_for`:
+def resolve_frontier_config(
+    n: int, deg: int, m: int
+) -> tuple[FrontierConfig, str]:
+    """Resolve the frontier knobs for one sparse-geodesic solve, with
+    provenance (same ordering as :func:`resolve_tiles`):
 
     1. ``REPRO_FRONTIER_TILES=bs,bn,bucket`` — pinned.
     2. ``REPRO_FRONTIER_AUTOTUNE=0`` — the static default, batch clamped
        to the VMEM residency cap.
-    3. Otherwise the cached roofline sweep
+    3. The measured-calibration layer (persisted winner / fresh sweep /
+       corrected-constant re-rank).
+    4. Otherwise the cached analytic sweep
        (:func:`best_frontier_config`).
     """
     raw = os.environ.get(ENV_FRONTIER_TILES)
     if raw:
-        return _parse_frontier_override(raw)
+        return _parse_frontier_override(raw), f"env:{ENV_FRONTIER_TILES}"
     if os.environ.get(ENV_FRONTIER_AUTOTUNE, "1").lower() in (
         "0", "false", "off"
     ):
@@ -441,9 +505,19 @@ def frontier_config(n: int, deg: int, m: int) -> FrontierConfig:
             min(FRONTIER_DEFAULT.bs, frontier_batch(n, m)),
             min(FRONTIER_DEFAULT.bn, n),
             FRONTIER_DEFAULT.bucket,
-        )
+        ), "default"
+    measure = _measure_layer()
+    if measure.active():
+        got = measure.resolve_frontier(n, deg, m)
+        if got is not None:
+            return got
     cfg, _ = best_frontier_config(n, deg, m)
-    return cfg
+    return cfg, "modeled"
+
+
+def frontier_config(n: int, deg: int, m: int) -> FrontierConfig:
+    """:func:`resolve_frontier_config` without the provenance."""
+    return resolve_frontier_config(n, deg, m)[0]
 
 
 # ----------------------------------------------------- fused kNN kernel --
@@ -472,7 +546,8 @@ KNN_DEFAULT = KnnConfig(bm=256, bn=256)
 
 
 def knn_cost(
-    m: int, n: int, d: int, k: int, cfg: KnnConfig, *, itemsize: int = 4
+    m: int, n: int, d: int, k: int, cfg: KnnConfig, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> Cost:
     """Roofline terms for one fused kNN launch: m query rows against n
     candidate rows of depth d, keeping k per row.
@@ -504,7 +579,7 @@ def knn_cost(
         + 2 * mp * k       # seed lists read (dists + indices)
         + 2 * mp * k       # output lists write
     )
-    hbm_s = hbm_bytes / HBM_BW
+    hbm_s = hbm_bytes / (hbm_bw if hbm_bw else HBM_BW)
 
     # VMEM: double-buffered point tiles, the distance tile, the
     # (bm, bn + k) vals/idxs/pos merge working set, running + output lists
@@ -515,7 +590,7 @@ def knn_cost(
         + 4 * bm * k
     )
     return Cost(
-        time_s=max(compute_s, hbm_s),
+        time_s=max(compute_s, hbm_s) + launch_s,
         compute_s=compute_s,
         hbm_s=hbm_s,
         hbm_bytes=float(hbm_bytes),
@@ -547,14 +622,17 @@ def knn_candidates(m: int, n: int, k: int) -> Iterator[KnnConfig]:
 
 @functools.lru_cache(maxsize=4096)
 def best_knn_config(
-    m: int, n: int, d: int, k: int, *, itemsize: int = 4
+    m: int, n: int, d: int, k: int, *, itemsize: int = 4,
+    hbm_bw: float | None = None, launch_s: float = 0.0,
 ) -> tuple[KnnConfig, Cost]:
     """Sweep :func:`knn_candidates` under :func:`knn_cost`; candidates
-    busting the VMEM budget fall back to the smallest working set."""
+    busting the VMEM budget fall back to the smallest working set.
+    ``hbm_bw``/``launch_s`` rank under measured-corrected constants."""
     best = None
     fallback = None
     for cfg in knn_candidates(m, n, k):
-        cost = knn_cost(m, n, d, k, cfg, itemsize=itemsize)
+        cost = knn_cost(m, n, d, k, cfg, itemsize=itemsize,
+                        hbm_bw=hbm_bw, launch_s=launch_s)
         fkey = (cost.vmem_bytes, cost.time_s)
         if fallback is None or fkey < fallback[0]:
             fallback = (fkey, cfg, cost)
@@ -570,39 +648,42 @@ def best_knn_config(
 
 
 def _parse_knn_override(raw: str) -> KnnConfig:
-    parts = raw.split(",")
-    if len(parts) != 2:
-        raise ValueError(
-            f"{ENV_KNN_TILES}={raw!r}: expected 'bm,bn' "
-            "(two comma-separated ints)"
-        )
-    try:
-        bm, bn = (int(p) for p in parts)
-    except ValueError as e:
-        raise ValueError(f"{ENV_KNN_TILES}={raw!r}: {e}") from None
-    if min(bm, bn) < 1:
-        raise ValueError(f"{ENV_KNN_TILES}={raw!r}: tiles must be >= 1")
-    return KnnConfig(bm, bn)
+    return KnnConfig(*_parse_knobs(ENV_KNN_TILES, raw, ("bm", "bn")))
 
 
-def knn_config(m: int, n: int, d: int, k: int) -> KnnConfig:
-    """Resolve the fused-kNN tiles for one launch.
-
-    Resolution order mirrors :func:`tiles_for`:
+def resolve_knn_config(
+    m: int, n: int, d: int, k: int
+) -> tuple[KnnConfig, str]:
+    """Resolve the fused-kNN tiles for one launch, with provenance
+    (same ordering as :func:`resolve_tiles`):
 
     1. ``REPRO_KNN_TILES=bm,bn`` — pinned for every call.
     2. ``REPRO_KNN_AUTOTUNE=0`` — the static default, clamped.
-    3. Otherwise the cached roofline sweep (:func:`best_knn_config`).
+    3. The measured-calibration layer (persisted winner / fresh sweep /
+       corrected-constant re-rank).
+    4. Otherwise the cached analytic sweep (:func:`best_knn_config`).
     """
     raw = os.environ.get(ENV_KNN_TILES)
     if raw:
-        return _parse_knn_override(raw)
+        return _parse_knn_override(raw), f"env:{ENV_KNN_TILES}"
     if os.environ.get(ENV_KNN_AUTOTUNE, "1").lower() in (
         "0", "false", "off"
     ):
-        return KnnConfig(min(KNN_DEFAULT.bm, m), min(KNN_DEFAULT.bn, n))
+        return KnnConfig(
+            min(KNN_DEFAULT.bm, m), min(KNN_DEFAULT.bn, n)
+        ), "default"
+    measure = _measure_layer()
+    if measure.active():
+        got = measure.resolve_knn(m, n, d, k)
+        if got is not None:
+            return got
     cfg, _ = best_knn_config(m, n, d, k)
-    return cfg
+    return cfg, "modeled"
+
+
+def knn_config(m: int, n: int, d: int, k: int) -> KnnConfig:
+    """:func:`resolve_knn_config` without the provenance."""
+    return resolve_knn_config(m, n, d, k)[0]
 
 
 # --------------------------------------------------- pairwise auto-shrink --
@@ -622,7 +703,9 @@ def pairwise_tiles(m: int, n: int, d: int, *, cap: int = 512) -> dict:
 
 
 def clear_cache() -> None:
-    """Drop the in-process sweep cache (tests / constant hot-swapping)."""
+    """Drop the in-process sweep caches AND the measured layer's
+    store-backed caches (tests / constant or store hot-swapping)."""
     best_config.cache_clear()
     best_frontier_config.cache_clear()
     best_knn_config.cache_clear()
+    _measure_layer().clear_cache()

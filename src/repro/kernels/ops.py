@@ -70,7 +70,24 @@ def _resolve(mode: str) -> tuple[bool, bool]:
     raise ValueError(f"unknown kernel mode {mode!r}")
 
 
-def _validate_tiles(name: str, m: int, n: int, k: int, tile_kw: dict) -> None:
+def _source_suffix(source: str) -> str:
+    """Human-readable provenance clause for tile-validation errors, so a
+    bad env pin or calibration-store entry is attributed to what
+    supplied it, not to the call site."""
+    if not source or source == "explicit kwargs":
+        return ""
+    if source.startswith("env:"):
+        return f" (supplied by the {source[4:]} environment variable)"
+    if source in ("store", "measured", "corrected"):
+        return (" (supplied by the calibration store, see "
+                "REPRO_TUNING_PATH / repro.kernels.measure)")
+    return f" (supplied by {source})"
+
+
+def _validate_tiles(
+    name: str, m: int, n: int, k: int, tile_kw: dict,
+    source: str = "explicit kwargs",
+) -> None:
     """Fail fast on bad tile overrides.
 
     Mirrors the kernels' own clamping (``bm = min(bm, m)`` etc.) and then
@@ -78,49 +95,63 @@ def _validate_tiles(name: str, m: int, n: int, k: int, tile_kw: dict) -> None:
     ``ValueError`` here instead of a raw assertion from inside the Pallas
     trace.  Runs regardless of dispatch path so a bad override is caught
     even where the reference implementation would silently ignore it.
+    *All* invalid knobs are reported in one error (unknown keys, bad
+    values, and non-dividing tiles together), and ``source`` names what
+    supplied them (explicit kwargs, a ``REPRO_*_TILES`` env pin, or a
+    calibration-store entry).
     """
+    problems = []
     unknown = set(tile_kw) - {"bm", "bn", "bk", "unroll"}
     if unknown:
-        raise ValueError(
-            f"{name}: unknown tile kwargs {sorted(unknown)} "
+        problems.append(
+            f"unknown tile kwargs {sorted(unknown)} "
             "(expected bm/bn/bk/unroll)"
         )
+    bad_vals = set()
     for key, val in tile_kw.items():
-        if not isinstance(val, int) or val < 1:
-            raise ValueError(
-                f"{name}: tile {key}={val!r} must be a positive int"
-            )
-    bm = min(tile_kw.get("bm", autotune.DEFAULT.bm), m)
-    bn = min(tile_kw.get("bn", autotune.DEFAULT.bn), n)
-    bk = min(tile_kw.get("bk", autotune.DEFAULT.bk), k)
-    unroll = min(tile_kw.get("unroll", autotune.DEFAULT.unroll), bk)
-    problems = []
-    if m % bm:
+        if key not in unknown and (not isinstance(val, int) or val < 1):
+            bad_vals.add(key)
+            problems.append(f"tile {key}={val!r} must be a positive int")
+
+    def knob(key, dflt, cap):
+        val = tile_kw.get(key, dflt)
+        if key in bad_vals or not isinstance(val, int):
+            val = dflt
+        return min(val, cap)
+
+    bm = knob("bm", autotune.DEFAULT.bm, m)
+    bn = knob("bn", autotune.DEFAULT.bn, n)
+    bk = knob("bk", autotune.DEFAULT.bk, k)
+    unroll = knob("unroll", autotune.DEFAULT.unroll, bk)
+    if bm >= 1 and m % bm:
         problems.append(f"bm={bm} does not divide m={m}")
-    if n % bn:
+    if bn >= 1 and n % bn:
         problems.append(f"bn={bn} does not divide n={n}")
-    if k % bk:
+    if bk >= 1 and k % bk:
         problems.append(f"bk={bk} does not divide k={k}")
-    if bk % unroll:
+    if unroll >= 1 and bk >= 1 and bk % unroll:
         problems.append(f"unroll={unroll} does not divide bk={bk}")
     if problems:
         raise ValueError(
             f"{name}: invalid tile override for ({m}, {n}) with "
             f"contraction {k}: " + "; ".join(problems)
+            + _source_suffix(source)
         )
 
 
 def _tiles(op: str, m: int, n: int, k: int, tile_kw: dict) -> dict:
     """Resolve the tile kwargs for one fused-kernel launch: validate any
-    explicit override, otherwise consult the autotuner."""
+    explicit override, otherwise consult the autotuner (env pins, the
+    measured-calibration store, then the analytic sweep)."""
     if tile_kw:
         _validate_tiles(op, m, n, k, tile_kw)
         return tile_kw
-    resolved = autotune.tiles_for(op, m, n, k)
+    resolved, source = autotune.resolve_tiles(op, m, n, k)
     if resolved:
-        # autotuned configs divide by construction; this guards the
-        # REPRO_MINPLUS_TILES env pin with the same clear error
-        _validate_tiles(op, m, n, k, resolved)
+        # analytic configs divide by construction; this guards the
+        # REPRO_MINPLUS_TILES env pin and calibration-store entries with
+        # the same clear error, attributed to their source
+        _validate_tiles(op, m, n, k, resolved, source=source)
     return resolved
 
 
@@ -228,18 +259,22 @@ def frontier_relax(dist, nbr, w, hi, *, mode: str = "auto", **tile_kw):
     """
     s, n = dist.shape
     deg = nbr.shape[1]
+    problems = []
     unknown = set(tile_kw) - {"bn"}
     if unknown:
-        raise ValueError(
-            f"frontier_relax: unknown tile kwargs {sorted(unknown)} "
-            "(expected bn)"
+        problems.append(
+            f"unknown tile kwargs {sorted(unknown)} (expected bn)"
         )
     bn = tile_kw.get("bn")
+    if bn is not None and (not isinstance(bn, int) or bn < 1):
+        problems.append(f"tile bn={bn!r} must be a positive int")
+    if problems:
+        raise ValueError(
+            f"frontier_relax: invalid tile override for ({s}, {n}): "
+            + "; ".join(problems)
+        )
     if bn is None:
         bn = autotune.frontier_config(n, deg, s).bn
-    if not isinstance(bn, int) or bn < 1:
-        raise ValueError(f"frontier_relax: tile bn={bn!r} must be a "
-                         "positive int")
     bn = min(bn, n)
     use_pallas, interpret = _resolve(mode)
     if not use_pallas:
@@ -278,35 +313,35 @@ def pairwise_sq_dists(x, y, *, mode: str = "auto", **tile_kw):
             f"pairwise_sq_dists: feature dims differ: x {(m, d)} vs "
             f"y {(n, d2)}"
         )
+    problems = []
     unknown = set(tile_kw) - {"bm", "bn", "bd"}
     if unknown:
-        raise ValueError(
-            f"pairwise_sq_dists: unknown tile kwargs {sorted(unknown)} "
-            "(expected bm/bn/bd)"
+        problems.append(
+            f"unknown tile kwargs {sorted(unknown)} (expected bm/bn/bd)"
         )
+    bad_vals = set()
     for key, val in tile_kw.items():
-        if not isinstance(val, int) or val < 1:
-            raise ValueError(
-                f"pairwise_sq_dists: tile {key}={val!r} must be a "
-                "positive int"
-            )
-    tiles = {**autotune.pairwise_tiles(m, n, d), **tile_kw}
+        if key not in unknown and (not isinstance(val, int) or val < 1):
+            bad_vals.add(key)
+            problems.append(f"tile {key}={val!r} must be a positive int")
+    auto = autotune.pairwise_tiles(m, n, d)
+    tiles = {**auto, **{k_: v for k_, v in tile_kw.items()
+                        if k_ not in unknown and k_ not in bad_vals}}
     if tile_kw:
         bm = min(tiles["bm"], m)
         bn = min(tiles["bn"], n)
         bd = min(tiles["bd"], d)
-        problems = []
         if m % bm:
             problems.append(f"bm={bm} does not divide m={m}")
         if n % bn:
             problems.append(f"bn={bn} does not divide n={n}")
         if d % bd:
             problems.append(f"bd={bd} does not divide D={d}")
-        if problems:
-            raise ValueError(
-                f"pairwise_sq_dists: invalid tile override for "
-                f"({m}, {d})x({n}, {d}): " + "; ".join(problems)
-            )
+    if problems:
+        raise ValueError(
+            f"pairwise_sq_dists: invalid tile override for "
+            f"({m}, {d})x({n}, {d}): " + "; ".join(problems)
+        )
     use_pallas, interpret = _resolve(mode)
     if use_pallas:
         return _pd_pallas(x, y, interpret=interpret, **tiles)
@@ -362,20 +397,29 @@ def knn_topk(
             f"knn_topk: seed_i {seed_i.shape} must match seed_d "
             f"{seed_d.shape}"
         )
+    problems = []
     unknown = set(tile_kw) - {"bm", "bn"}
     if unknown:
-        raise ValueError(
-            f"knn_topk: unknown tile kwargs {sorted(unknown)} "
-            "(expected bm/bn)"
+        problems.append(
+            f"unknown tile kwargs {sorted(unknown)} (expected bm/bn)"
         )
     for key, val in tile_kw.items():
-        if not isinstance(val, int) or val < 1:
-            raise ValueError(
-                f"knn_topk: tile {key}={val!r} must be a positive int"
-            )
-    cfg = autotune.knn_config(m, n, dfeat, k)
-    bm = min(tile_kw.get("bm", cfg.bm), m)
-    bn = min(tile_kw.get("bn", cfg.bn), n)
+        if key not in unknown and (not isinstance(val, int) or val < 1):
+            problems.append(f"tile {key}={val!r} must be a positive int")
+    if problems:
+        raise ValueError(
+            f"knn_topk: invalid tile override for ({m}, {n}) with "
+            f"k={k}: " + "; ".join(problems)
+        )
+    if "bm" in tile_kw and "bn" in tile_kw:
+        # fully pinned: skip resolution entirely (this is also what the
+        # measured-calibration sweep relies on to avoid re-entering the
+        # autotuner while timing candidates)
+        bm, bn = min(tile_kw["bm"], m), min(tile_kw["bn"], n)
+    else:
+        cfg = autotune.knn_config(m, n, dfeat, k)
+        bm = min(tile_kw.get("bm", cfg.bm), m)
+        bn = min(tile_kw.get("bn", cfg.bn), n)
 
     use_pallas, interpret = _resolve(mode)
     if not use_pallas:

@@ -68,6 +68,29 @@ def test_env_tile_override(monkeypatch):
         autotune.tiles_for("minplus_update", 256, 256, 256)
 
 
+def test_env_override_reports_all_bad_knobs_at_once(monkeypatch):
+    """A pin with several invalid knobs raises ONE error naming every
+    problem and the env var that supplied them, not just the first."""
+    monkeypatch.setenv(autotune.ENV_TILES, "0,32,-2,x")
+    with pytest.raises(ValueError) as ei:
+        autotune.tiles_for("minplus_update", 256, 256, 256)
+    msg = str(ei.value)
+    assert autotune.ENV_TILES in msg
+    assert "bm=0" in msg and "bk=-2" in msg and "unroll='x'" in msg
+    monkeypatch.setenv(autotune.ENV_KNN_TILES, "0,y")
+    with pytest.raises(ValueError) as ei:
+        autotune.knn_config(256, 2048, 3, 10)
+    msg = str(ei.value)
+    assert autotune.ENV_KNN_TILES in msg
+    assert "bm=0" in msg and "bn='y'" in msg
+    monkeypatch.setenv(autotune.ENV_FRONTIER_TILES, "-1,0,z")
+    with pytest.raises(ValueError) as ei:
+        autotune.frontier_config(2048, 16, 64)
+    msg = str(ei.value)
+    assert autotune.ENV_FRONTIER_TILES in msg
+    assert "bs=-1" in msg and "bn=0" in msg and "bucket='z'" in msg
+
+
 def test_env_autotune_disable(monkeypatch):
     monkeypatch.delenv(autotune.ENV_TILES, raising=False)
     monkeypatch.setenv(autotune.ENV_AUTOTUNE, "0")
