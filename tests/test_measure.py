@@ -104,6 +104,49 @@ def test_invalid_store_entry_is_skipped_with_warning():
     assert source == "modeled"
 
 
+def test_shape_class_miss_is_silent_exact_mismatch_warns():
+    # a shape-class (pow2) entry that simply does not divide this exact
+    # shape is a normal miss — no warning; the same mismatch under the
+    # *exact* key still warns (the entry was written for this shape)
+    import warnings as w
+
+    _, cls = measure._keys("minplus:minplus_update", (32, 64, 32), 4)
+    _seed_store({cls: _winner_entry((48, 48, 48, 4))})
+    with w.catch_warnings():
+        w.simplefilter("error", measure.TuningStoreWarning)
+        _, source = autotune.resolve_tiles("minplus_update", 32, 64, 32)
+    assert source == "modeled"
+    # malformed (non-positive tile) warns even under the class key
+    autotune.clear_cache()
+    _seed_store({cls: _winner_entry((0, 16, 16, 4))})
+    with pytest.warns(measure.TuningStoreWarning, match="invalid config"):
+        _, source = autotune.resolve_tiles("minplus_update", 32, 64, 32)
+    assert source == "modeled"
+
+
+def test_persist_merges_on_disk_winners():
+    # a winner written by another process after our in-process cache was
+    # primed must survive our next persist (merge, not last-writer-wins)
+    other = _winner_entry((4, 4, 4, 1))
+    path = _seed_store({"knn/4x4x4x2/i4": other})
+    measure.load_store(path)  # prime the stale in-process view
+    data = json.load(open(path))
+    data["devices"][measure.device_kind()]["winners"][
+        "frontier/8x4x2/i4"] = other
+    with open(path, "w") as fh:
+        json.dump(data, fh)
+    measure._persist("minplus:minplus_update", (16, 16, 16), 4,
+                     autotune.TileConfig(16, 16, 16, 1), 1e-4,
+                     autotune.TileConfig(16, 16, 16, 1), 2e-4,
+                     [[1e6, 0.0, 1e-4]])
+    winners = measure.load_store(path, cache=False)[
+        "devices"][measure.device_kind()]["winners"]
+    assert "knn/4x4x4x2/i4" in winners
+    assert "frontier/8x4x2/i4" in winners, "concurrent winner dropped"
+    assert any(k.startswith("minplus:minplus_update/16x16x16")
+               for k in winners)
+
+
 def test_env_pin_takes_precedence_over_store(monkeypatch):
     exact, _ = measure._keys("minplus:minplus_update", (32, 64, 32), 4)
     _seed_store({exact: _winner_entry((32, 64, 32, 8))})
@@ -205,6 +248,56 @@ def test_corrected_constants_rerank_unmeasured_shapes():
     _, fsrc = autotune.resolve_frontier_config(512, 16, 64)
     _, ksrc = autotune.resolve_knn_config(128, 512, 3, 10)
     assert fsrc == "corrected" and ksrc == "corrected"
+
+
+def test_sweep_jits_once_per_candidate(monkeypatch):
+    """The timed callable must reuse one jitted function per candidate:
+    re-tracing inside the timed repeats would fold compile time into the
+    measurements and persist wrong winners."""
+    traces = {"n": 0}
+    real = ops.minplus_update
+
+    def counting(*a, **kw):
+        traces["n"] += 1  # runs once per jit trace, not per call
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "minplus_update", counting)
+    monkeypatch.setenv(measure.ENV_MEASURE, "refresh")
+    autotune.clear_cache()
+    before = measure.sweep_count()
+    got = measure.calibrate_minplus("minplus_update", 16, 32, 16,
+                                    mode="ref")
+    assert got is not None and got.source == "measured"
+    n_candidates = measure.sweep_count() - before
+    assert n_candidates > 0
+    assert traces["n"] == n_candidates, (
+        "timed callable re-traced per call: compile overhead pollutes "
+        "the measured times")
+
+
+def test_frontier_fit_samples_use_raw_sweep_time(monkeypatch):
+    """Constant-fit samples from the frontier sweep must carry the raw
+    measured sweep time (matching the single-sweep hbm_bytes), not the
+    bucket-amortized per-source winner metric."""
+    dt = 1e-4
+    state = {"t": 0.0}
+
+    def tick():
+        state["t"] += dt
+        return state["t"]
+
+    monkeypatch.setenv(measure.ENV_MEASURE, "refresh")
+    autotune.clear_cache()
+    measure.timer = tick
+    got = measure.calibrate_frontier(64, 4, 8, mode="ref")
+    assert got is not None and got.source == "measured"
+    rec = measure.load_store(cache=False)[
+        "devices"][measure.device_kind()]
+    assert rec["samples"], "no fit samples persisted"
+    for _, _, t in rec["samples"]:
+        assert t == pytest.approx(dt), (
+            "fit sample carries the amortized metric, not the raw "
+            "sweep time")
 
 
 # ------------------------------------------------- sweeps and caching --
